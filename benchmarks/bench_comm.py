@@ -1,0 +1,73 @@
+"""§3.5 analogue: adaptive-communication microbenchmarks (REAL timings).
+
+Measures the channel + router data plane: put/get latency, weighted
+balancing overhead, structure-aware payload pack/unpack vs naive pickle,
+and worker offload/onload bandwidth (the context-switch cost driver).
+"""
+from __future__ import annotations
+
+import pickle
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.comm.primitives import Payload, Router
+from repro.core import Channel, Worker
+
+
+def run() -> None:
+    # channel put/get
+    ch = Channel.create(f"bench-{time.time_ns()}")
+    item = {"x": np.ones((256, 256), np.float32)}
+
+    def putget():
+        for _ in range(100):
+            ch.put(item)
+        for _ in range(100):
+            ch.get()
+
+    us = time_call(putget, repeats=3)
+    emit("comm.channel_putget", us / 200.0, "per_op")
+
+    # router p2p with a 4 MB pytree payload
+    r = Router()
+    r.register("a", devices=[0])
+    r.register("b", devices=[1])
+    tree = {"w": np.ones((1024, 1024), np.float32),
+            "meta": {"step": 3, "ids": np.arange(64)}}
+
+    def sendrecv():
+        r.send("a", "b", tree)
+        r.recv("b", "a")
+
+    us = time_call(sendrecv, repeats=5)
+    mb = 4.0
+    emit("comm.router_p2p_4MB", us, f"{mb / (us / 1e6):.0f}MB/s")
+
+    # structure-aware payload vs pickle round-trip
+    us_pack = time_call(lambda: Payload.pack(tree).unpack(), repeats=5)
+    us_pickle = time_call(lambda: pickle.loads(pickle.dumps(tree)), repeats=5)
+    emit("comm.payload_roundtrip", us_pack,
+         f"pickle={us_pickle:.0f}us;speedup={us_pickle / max(us_pack, 1e-9):.1f}x")
+
+    # offload/onload bandwidth (the context-switch primitive)
+    import jax
+    import jax.numpy as jnp
+    w = Worker("bench/0", devices=(0,))
+    w.register_state("params", {"w": jnp.ones((2048, 2048))})
+    nbytes = w.state_bytes()
+
+    def cycle():
+        w.offload()
+        w.onload()
+        jax.block_until_ready(w.get_state("params")["w"])
+
+    us = time_call(cycle, repeats=5)
+    emit("comm.offload_onload_16MB", us,
+         f"{nbytes * 2 / (us / 1e6) / 1e9:.2f}GB/s")
+    w.shutdown()
+
+
+if __name__ == "__main__":
+    run()

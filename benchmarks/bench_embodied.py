@@ -1,0 +1,72 @@
+"""Fig. 9 analogue: embodied RL under different placement strategies.
+
+Two environment profiles:
+  * ManiSkill-like (GPU-parallel sim): hybrid placement should win
+    (paper: 1.61x-1.88x over the RL4VLA disaggregated baseline);
+  * LIBERO-like (CPU-bound sim): collocated should win
+    (paper: 1.25x-2.13x over hybrid).
+
+The paper's qualitative claim — no single mode is universally optimal and
+the auto scheduler tracks the per-workload best — is checked explicitly.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.common import embodied_profiles, emit
+from repro.core import (
+    FlowGraph,
+    Scheduler,
+    SchedulerConfig,
+    collocated_schedule,
+    disaggregated_schedule,
+)
+
+BATCH = 256  # environments
+
+
+def embodied_graph() -> FlowGraph:
+    g = FlowGraph()
+    for w in ("simulator", "rollout", "training"):
+        g.add_worker(w)
+    g.add_edge("simulator", "rollout")
+    g.add_edge("rollout", "simulator")  # sim<->gen cycle
+    g.add_edge("rollout", "training")
+    return g
+
+
+def run() -> Dict:
+    g = embodied_graph()
+    results = {}
+    for env in ("maniskill", "libero"):
+        profiles = embodied_profiles(env)
+        for n in (8, 16, 32):
+            cfg = SchedulerConfig(total_batch=BATCH, device_quantum=2,
+                                  granularity_divisors=(1, 2, 4, 8))
+            sch = Scheduler(profiles, cfg)
+            t_auto, s_auto = sch.schedule(g, n, BATCH)
+            t_col, _ = collocated_schedule(g, profiles, n, BATCH)
+            t_dis, _ = disaggregated_schedule(g, profiles, n, BATCH)
+            best_fixed = min(t_col, t_dis)
+            best_name = "collocated" if t_col <= t_dis else "disaggregated"
+            results[(env, n)] = dict(auto=t_auto, col=t_col, dis=t_dis)
+            emit(f"embodied.{env}.n{n}", 0.0,
+                 f"batches_per_s={BATCH / t_auto:.2f}"
+                 f";x_vs_col={t_col / t_auto:.2f}"
+                 f";x_vs_dis={t_dis / t_auto:.2f}"
+                 f";best_fixed={best_name}"
+                 f";auto_matches_best={t_auto <= best_fixed + 1e-9}")
+    # the cross-env claim (paper Fig. 9): ManiSkill profits from the hybrid
+    # schedule (sim || gen pipelined, training swapped in), LIBERO is
+    # CPU-sim-bound so collocation is already near-optimal — i.e. no fixed
+    # mode is universally best and auto tracks the per-workload optimum.
+    man = results[("maniskill", 16)]
+    lib = results[("libero", 16)]
+    emit("embodied.mode_flip_check", 0.0,
+         f"maniskill_hybrid_gain={man['col'] / man['auto']:.2f}x_(paper_1.61-1.88x)"
+         f";libero_auto_over_col={lib['col'] / lib['auto']:.2f}x_(~1_collocated_best)")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Deliverable (g): roofline table from the dry-run artifacts.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+produces the per-(arch × shape × mesh) roofline rows: the three terms in
+seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and HBM fit.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+HBM = 16 * 1024**3  # v5e
+
+
+def load_reports(mesh: Optional[str] = None, tag: str = "") -> List[Dict]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(fn)[:-len(".json")]
+        if tag:
+            if not base.endswith(f"_{tag}"):
+                continue
+        elif "_opt" in base:
+            continue  # hillclimb variants are reported separately
+        with open(fn) as f:
+            r = json.load(f)
+        if mesh and r["mesh"] != mesh:
+            continue
+        out.append(r)
+    return out
+
+
+def table(reports: List[Dict]) -> str:
+    hdr = (f"| {'arch':24s} | {'shape':11s} | {'mesh':7s} | C (ms) | M (ms) "
+           f"| X (ms) | dominant | useful | HBM GiB | fits |")
+    sep = "|" + "-" * (len(hdr) - 2) + "|"
+    lines = [hdr, sep]
+    for r in sorted(reports, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        rf = r["roofline"]
+        peak = r["memory"]["peak_est_bytes"] / 2**30
+        lines.append(
+            f"| {r['arch']:24s} | {r['shape']:11s} | {r['mesh']:7s} "
+            f"| {rf['compute_s'] * 1e3:9.2f} | {rf['memory_s'] * 1e3:9.2f} "
+            f"| {rf['collective_s'] * 1e3:9.2f} | {rf['dominant']:9s} "
+            f"| {rf['useful_flops_ratio']:6.3f} | {peak:7.2f} "
+            f"| {'Y' if peak <= 16.0 else 'OVER'} |")
+    return "\n".join(lines)
+
+
+def run() -> None:
+    for mesh in ("16x16", "2x16x16"):
+        reports = load_reports(mesh)
+        if not reports:
+            continue
+        doms = {}
+        fits = 0
+        for r in reports:
+            doms[r["roofline"]["dominant"]] = doms.get(
+                r["roofline"]["dominant"], 0) + 1
+            fits += r["memory"]["peak_est_bytes"] <= HBM
+        emit(f"roofline.{mesh}", 0.0,
+             f"cases={len(reports)};fits={fits};dominant={doms}")
+    print(table(load_reports()))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus the roofline table).
+
+  E5 bench_longtail    — Fig. 2  (response-length dynamicity, tail factor)
+  E1 bench_exec_modes  — Fig. 8/10 (3 modes × model sizes × cluster scales)
+  E2 bench_embodied    — Fig. 9  (ManiSkill/LIBERO placement flip)
+  E3 bench_breakdown   — Fig. 11-13 (component latency breakdown)
+  E4 bench_scheduler   — Alg. 1 (optimality + runtime)
+  E6 bench_comm        — §3.5  (channels/router/offload, real timings)
+  E7 roofline_table    — deliverable (g) from the dry-run artifacts
+
+Run:  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    print("name,us_per_call,derived")
+
+    from benchmarks import bench_longtail
+    tail = bench_longtail.run()
+
+    from benchmarks import bench_exec_modes
+    bench_exec_modes.run(tail_factor=tail)
+
+    from benchmarks import bench_embodied
+    bench_embodied.run()
+
+    from benchmarks import bench_breakdown
+    bench_breakdown.run(tail_factor=tail)
+
+    from benchmarks import bench_scheduler
+    bench_scheduler.run()
+
+    from benchmarks import bench_comm
+    bench_comm.run()
+
+    from benchmarks import roofline_table
+    roofline_table.run()
+
+    print(f"\n# benchmarks completed in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Deep-Research workflow (paper Fig. 1 bottom-right): RL with a search
+tool in the loop — the fourth and last of the paper's scenarios.
+
+A synthetic "web": facts map a topic token to an answer digit.  Facts
+are RESAMPLED EVERY ITERATION, so memorizing topic→answer is impossible —
+the only way to beat chance (10%) is to (1) QUERY the topic shown in the
+prompt (the tool returns that topic's current fact) and then (2) COPY
+the observed fact as the answer.  Reward is the rule-based ±5.
+
+The policy↔tool loop is a CYCLE in the workflow graph; M2Flow collapses
+it and schedules {cycle, reward, train} exactly as in the embodied case.
+
+Run:  PYTHONPATH=src python examples/deep_research.py [--iters 80]
+"""
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import Cluster, Controller, FlowGraph, SchedulerConfig
+from repro.core.profiler import CostModel
+from repro.models import forward, init_model
+from repro.models.layers import token_logprobs
+from repro.rl.advantage import grpo_advantages, broadcast_to_tokens
+from repro.train.optimizer import AdamWConfig, init_adamw
+from repro.train.trainer import TrainHParams, make_train_step
+
+# token layout: PAD 0, BOS 1, digits 2..11, topics 12..19, QUERY=20+topic
+PAD, BOS, D0 = 0, 1, 2
+N_TOPICS, TOPIC0 = 8, 12
+QUERY0 = TOPIC0 + N_TOPICS  # query actions 20..27
+VOCAB = QUERY0 + N_TOPICS  # 28
+SEQ = 8  # [BOS, topic, query, fact, ans, EOSish pad...]
+
+
+class SearchToolWorker:
+    """The search server: topic -> fact token (its current answer digit).
+    refresh() re-randomizes the corpus — the anti-memorization device."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+        self.refresh()
+
+    def refresh(self) -> None:
+        self.facts = self.rng.integers(0, 10, N_TOPICS)
+
+    def search(self, query_topic: np.ndarray) -> np.ndarray:
+        """query actions (B,) in [0, N_TOPICS) -> fact tokens (B,)."""
+        return (D0 + self.facts[query_topic]).astype(np.int32)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=80)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--group", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args(argv)
+
+    cfg = get_config("codeqwen1.5-7b").reduced().replace(
+        name="dr-policy", vocab_size=VOCAB, d_model=128, num_heads=4,
+        num_kv_heads=2, head_dim=32, d_ff=256, max_seq_len=SEQ)
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg)
+    opt = init_adamw(params)
+    hp = TrainHParams(optimizer=AdamWConfig(lr=args.lr, clip_norm=1.0),
+                      entropy_coef=0.02)
+    train_step = jax.jit(make_train_step(cfg, hp))
+    tool = SearchToolWorker(seed=0)
+
+    @jax.jit
+    def act(params, toks, lo, hi, key):
+        logits, _ = forward(params, cfg, toks)
+        last = logits[:, -1].astype(jnp.float32)
+        ar = jnp.arange(last.shape[-1])
+        last = jnp.where((ar >= lo) & (ar < hi), last, -1e30)
+        tok = jax.random.categorical(key, last, axis=-1)
+        return tok.astype(jnp.int32), token_logprobs(last, tok)
+
+    # ---- workflow graph: policy <-> tool cycle + reward + train ----
+    g = FlowGraph()
+    for w in ("policy_gen", "search_tool", "reward", "train"):
+        g.add_worker(w)
+    g.add_edge("policy_gen", "search_tool")
+    g.add_edge("search_tool", "policy_gen")  # the tool loop
+    g.add_edge("policy_gen", "reward")
+    g.add_edge("reward", "train")
+    profiles = {
+        "policy_gen": CostModel("policy_gen", base_time=0.05,
+                                slope_time=2e-3, onload_time=0.2,
+                                offload_time=0.2),
+        "search_tool": CostModel("search_tool", base_time=0.08,
+                                 slope_time=1e-4, scalable=False,
+                                 max_useful_devices=2),
+        "reward": CostModel("reward", base_time=0.01, slope_time=1e-5),
+        "train": CostModel("train", base_time=0.1, slope_time=1e-3,
+                           onload_time=0.4, offload_time=0.3),
+    }
+    ctl = Controller(Cluster(num_nodes=1, devices_per_node=8),
+                     profiles=profiles,
+                     scheduler_cfg=SchedulerConfig(
+                         total_batch=args.batch,
+                         granularity_divisors=(1, 2, 4), device_quantum=2))
+    plan = ctl.plan(g, total_batch=args.batch, mode="auto")
+    print("M2Flow plan for the deep-research workflow:")
+    print(plan.pretty())
+
+    rng = np.random.default_rng(1)
+    accs = []
+    B = args.batch
+    for it in range(args.iters):
+        t0 = time.time()
+        tool.refresh()  # new facts every iteration: querying is mandatory
+        n_q = B // args.group
+        topics = np.repeat(rng.integers(0, N_TOPICS, n_q), args.group)
+        answers = tool.facts[topics]  # ground truth digits
+
+        toks = np.full((B, SEQ), PAD, np.int32)
+        toks[:, 0] = BOS
+        toks[:, 1] = TOPIC0 + topics
+        lps = np.zeros((B, SEQ), np.float32)
+        mask = np.zeros((B, SEQ), np.float32)
+
+        # step 1: policy chooses a QUERY action (which topic to search)
+        key, k1 = jax.random.split(key)
+        q_tok, q_lp = act(params, jnp.asarray(toks[:, :2]),
+                          QUERY0, QUERY0 + N_TOPICS, k1)
+        q_tok, q_lp = np.asarray(q_tok), np.asarray(q_lp)
+        toks[:, 2] = q_tok
+        lps[:, 2] = q_lp
+        mask[:, 2] = 1.0
+        # the tool returns the queried topic's fact
+        fact = tool.search(q_tok - QUERY0)
+        toks[:, 3] = fact  # observation (not a policy action)
+
+        # step 2: policy answers with a digit
+        key, k2 = jax.random.split(key)
+        a_tok, a_lp = act(params, jnp.asarray(toks[:, :4]), D0, D0 + 10, k2)
+        a_tok, a_lp = np.asarray(a_tok), np.asarray(a_lp)
+        toks[:, 4] = a_tok
+        lps[:, 4] = a_lp
+        mask[:, 4] = 1.0
+
+        rewards = np.where(a_tok - D0 == answers, 5.0, -5.0).astype(np.float32)
+        adv = broadcast_to_tokens(grpo_advantages(rewards, args.group), mask)
+        params, opt, metrics = train_step(params, opt, {
+            "tokens": jnp.asarray(toks),
+            "old_logprobs": jnp.asarray(lps),
+            "advantages": jnp.asarray(adv),
+            "loss_mask": jnp.asarray(mask)})
+        acc = float((rewards > 0).mean())
+        accs.append(acc)
+        if it % 10 == 0 or it == args.iters - 1:
+            qacc = float((q_tok - QUERY0 == topics).mean())
+            print(f"iter {it:3d} wall={time.time() - t0:5.2f}s "
+                  f"answer_acc={acc:4.2f} query_acc={qacc:4.2f} "
+                  f"avg10={np.mean(accs[-10:]):4.2f}")
+    first, last = np.mean(accs[:10]), np.mean(accs[-10:])
+    print(f"\nanswer accuracy: first10={first:.2f} -> last10={last:.2f} "
+          f"(chance=0.1)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,40 @@
+"""Quickstart: program an RL workflow imperatively, let M2Flow schedule it.
+
+Mirrors the paper's Fig. 5 programming model: worker definitions live in
+``repro.rl.workers``; this runner composes them in <30 lines and compares
+the three execution modes on the same logical workflow — no code changes.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+from repro.configs import get_config
+from repro.rl import GRPOConfig, GRPORunner
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import TrainHParams
+
+
+def main():
+    # a tiny same-family variant of one of the assigned archs
+    cfg = get_config("yi-9b").reduced().replace(
+        vocab_size=32, d_model=128, num_heads=4, num_kv_heads=2, d_ff=256)
+    hp = TrainHParams(optimizer=AdamWConfig(lr=1e-3))
+
+    results = {}
+    for mode in ("collocated", "disaggregated", "auto"):
+        rl = GRPOConfig(batch_size=16, group_size=4, iterations=5,
+                        max_new_tokens=6, mode=mode, seed=0)
+        runner = GRPORunner(cfg, rl, hp)
+        runner.run(verbose=False)
+        results[mode] = runner.throughput()
+        print(f"[{mode:>13s}] throughput = {results[mode]:8.1f} tok/s   "
+              f"plan: {type(runner.plan.schedule).__name__}")
+
+    best = max(results, key=results.get)
+    print(f"\nM2Flow-selected mode ('auto') vs fixed modes: "
+          f"auto={results['auto']:.0f} tok/s, best fixed={best}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,91 @@
+"""End-to-end reasoning-RL driver: train a ~100M-param model with GRPO for
+a few hundred steps on verifiable synthetic math, through the full M2Flow
+runtime (profile → schedule → pipelined execution).
+
+This is the repo's "train a ~100M model for a few hundred steps" driver
+(deliverable b).  The reward is the paper's rule-based ±5; accuracy on the
+task should climb well above the ~8% random baseline.
+
+Run:  PYTHONPATH=src python examples/reasoning_grpo.py [--steps 200] [--small]
+"""
+import argparse
+import json
+import sys
+import time
+
+from repro.configs import get_config
+from repro.rl import GRPOConfig, GRPORunner
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import TrainHParams
+
+
+def build_cfg(small: bool):
+    base = get_config("yi-9b")
+    if small:
+        # CI-sized: ~1M params
+        return base.reduced().replace(
+            vocab_size=32, d_model=128, num_heads=4, num_kv_heads=2,
+            d_ff=256, num_layers=2)
+    # ~100M-param same-family model (vocab from the synthetic task)
+    return base.replace(
+        name="yi-100m", num_layers=8, d_model=768, num_heads=12,
+        num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32,
+        max_seq_len=64)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--group", type=int, default=8)
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "collocated", "disaggregated"])
+    ap.add_argument("--max-operand", type=int, default=3)
+    ap.add_argument("--small", action="store_true",
+                    help="~1M params, fast smoke")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    cfg = build_cfg(args.small)
+    hp = TrainHParams(optimizer=AdamWConfig(lr=1e-3, warmup_steps=10,
+                                            clip_norm=1.0),
+                      clip_eps_low=0.2, clip_eps_high=0.28,
+                      entropy_coef=0.02)
+    rl = GRPOConfig(batch_size=args.batch, group_size=args.group,
+                    iterations=args.steps, max_new_tokens=3,
+                    temperature=1.0, mode=args.mode, seed=0)
+    runner = GRPORunner(cfg, rl, hp)
+    runner.data.max_operand = args.max_operand  # answer-size curriculum
+    runner.data.add_only = True
+    runner.profile()
+    runner.plan_execution()
+    print(runner.plan.pretty())
+
+    t0 = time.time()
+    window = []
+    for it in range(args.steps):
+        st = runner.run_iteration(it)
+        window.append(st.accuracy)
+        if len(window) > 20:
+            window.pop(0)
+        if it % 10 == 0 or it == args.steps - 1:
+            print(f"iter {it:4d} wall={st.wall_time:5.2f}s "
+                  f"reward={st.mean_reward:+6.2f} "
+                  f"acc(20)={sum(window)/len(window):5.2f} "
+                  f"kl={st.metrics.get('approx_kl', 0.0):+.4f}")
+    total = time.time() - t0
+    final_acc = sum(window) / len(window)
+    print(f"\ndone: {args.steps} iterations in {total:.1f}s; "
+          f"final acc(20)={final_acc:.2f}; "
+          f"throughput={runner.throughput():.1f} tok/s")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"final_acc": final_acc,
+                       "throughput": runner.throughput(),
+                       "stats": [vars(s) for s in runner.stats]}, f,
+                      default=str)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

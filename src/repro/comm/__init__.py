@@ -1,0 +1,7 @@
+from repro.comm.primitives import Payload, Router, global_router, reset_router  # noqa: F401
+from repro.comm.resharding import (  # noqa: F401
+    reshard,
+    reshard_params,
+    timed_weight_sync,
+    transfer_stats,
+)

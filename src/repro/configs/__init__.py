@@ -1,0 +1,40 @@
+"""Architecture configs (assigned pool + the paper's own models)."""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = [
+    "granite_moe_3b_a800m",
+    "zamba2_2p7b",
+    "whisper_large_v3",
+    "llama4_scout_17b_a16e",
+    "llama_3_2_vision_90b",
+    "codeqwen1_5_7b",
+    "mamba2_370m",
+    "yi_9b",
+    "mistral_large_123b",
+    "stablelm_12b",
+    "qwen2_5_7b",
+]
+
+_loaded = False
+
+
+def _load_all() -> None:
+    global _loaded
+    if _loaded:
+        return
+    for m in _MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    _loaded = True
+
+
+from repro.configs.base import (  # noqa: E402,F401
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeConfig,
+    get_config,
+    list_archs,
+)
+from repro.configs.shapes import SHAPES, get_shape, list_shapes  # noqa: E402,F401

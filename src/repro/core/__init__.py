@@ -1,0 +1,17 @@
+from repro.core.channel import Channel, ChannelClosed, DeviceLock  # noqa: F401
+from repro.core.controller import Controller, ExecutionPlan  # noqa: F401
+from repro.core.flowgraph import FlowGraph, GraphTracer, TraceEvent  # noqa: F401
+from repro.core.pipeline import ExecutionFlowManager, coalesce, split_batch  # noqa: F401
+from repro.core.placement import Cluster, split_devices  # noqa: F401
+from repro.core.profiler import CostModel, Profiler, paper_like_profiles  # noqa: F401
+from repro.core.scheduler import (  # noqa: F401
+    Leaf,
+    Pipelined,
+    Scheduler,
+    SchedulerConfig,
+    Temporal,
+    collocated_schedule,
+    disaggregated_schedule,
+)
+from repro.core.simulator import SimResult, Simulator  # noqa: F401
+from repro.core.worker import FutureHandle, Worker, WorkerFailure, WorkerGroup  # noqa: F401

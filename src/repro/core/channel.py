@@ -1,0 +1,231 @@
+"""Load-balancing data channel + distributed device lock (paper §3.3/§3.5).
+
+The channel decouples producer/consumer control flow (the foundation of
+elastic pipelining) and carries the *device lock* that realizes automatic
+context switching: workers sharing devices acquire the lock before using
+them; acquisition priority follows the channel's data-dependency order
+(producers before consumers), which rules out deadlock; onload/offload
+hooks run automatically around acquisition.
+"""
+from __future__ import annotations
+
+import heapq
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+@dataclass(order=True)
+class _Item:
+    sort_key: float
+    seq: int
+    data: Any = field(compare=False)
+    weight: float = field(default=1.0, compare=False)
+
+
+class ChannelClosed(Exception):
+    pass
+
+
+class Channel:
+    """FIFO queue with per-item weights and pluggable load balancing.
+
+    * ``put(data, weight=...)`` — weight drives consumer balancing.
+    * ``get()`` — default FIFO; a consumer with a custom policy
+      (``policy(items) -> index``) picks among queued items.
+    * ``get_batch(min_items / min_weight)`` — granularity coalescing used
+      by the Execution Flow Manager (elastic pipelining).
+    * ``device_lock`` — see :class:`DeviceLock`.
+    """
+
+    _registry: Dict[str, "Channel"] = {}
+
+    def __init__(self, name: str, *, capacity: int = 0,
+                 offload_to_host: bool = False):
+        self.name = name
+        self.capacity = capacity
+        self.offload_to_host = offload_to_host
+        self._q: List[_Item] = []
+        self._seq = 0
+        self._closed = False
+        self._cv = threading.Condition()
+        self.device_lock = DeviceLock(f"lock[{name}]")
+        # consumer-side accounting for weighted balancing
+        self._consumer_load: Dict[str, float] = {}
+        self.total_put = 0
+        self.total_get = 0
+
+    # -- creation ---------------------------------------------------------
+    @classmethod
+    def create(cls, name: str, **kw) -> "Channel":
+        ch = cls(name, **kw)
+        cls._registry[name] = ch
+        return ch
+
+    @classmethod
+    def get_channel(cls, name: str) -> "Channel":
+        return cls._registry[name]
+
+    @classmethod
+    def reset_all(cls) -> None:
+        cls._registry.clear()
+
+    # -- producer ----------------------------------------------------------
+    def put(self, data: Any, weight: float = 1.0) -> None:
+        with self._cv:
+            if self._closed:
+                raise ChannelClosed(self.name)
+            while self.capacity and len(self._q) >= self.capacity:
+                self._cv.wait()
+            item = _Item(sort_key=self._seq, seq=self._seq, data=data,
+                         weight=weight)
+            self._seq += 1
+            heapq.heappush(self._q, item)
+            self.total_put += 1
+            self._cv.notify_all()
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    # -- consumer ----------------------------------------------------------
+    def get(self, *, consumer: str = "default",
+            policy: Optional[Callable[[List[Any]], int]] = None,
+            timeout: Optional[float] = None) -> Any:
+        deadline = time.time() + timeout if timeout else None
+        with self._cv:
+            while not self._q:
+                if self._closed:
+                    raise ChannelClosed(self.name)
+                remaining = (deadline - time.time()) if deadline else None
+                if remaining is not None and remaining <= 0:
+                    raise queue.Empty()
+                self._cv.wait(timeout=remaining)
+            if policy is not None:
+                datas = [it.data for it in sorted(self._q)]
+                idx = policy(datas)
+                chosen = sorted(self._q)[idx]
+                self._q.remove(chosen)
+                heapq.heapify(self._q)
+            else:
+                chosen = heapq.heappop(self._q)
+            self.total_get += 1
+            self._consumer_load[consumer] = (
+                self._consumer_load.get(consumer, 0.0) + chosen.weight)
+            self._cv.notify_all()
+            return chosen.data
+
+    def get_batch(self, *, min_items: int = 1,
+                  consumer: str = "default",
+                  timeout: Optional[float] = None) -> List[Any]:
+        """Coalesce ``min_items`` items (blocking) — granularity control."""
+        out = [self.get(consumer=consumer, timeout=timeout)]
+        while len(out) < min_items:
+            try:
+                out.append(self.get(consumer=consumer, timeout=timeout))
+            except ChannelClosed:
+                break
+        return out
+
+    def balanced_consumer(self) -> str:
+        """Least-loaded consumer so far (weighted load balancing)."""
+        if not self._consumer_load:
+            return "default"
+        return min(self._consumer_load, key=self._consumer_load.get)
+
+    def qsize(self) -> int:
+        with self._cv:
+            return len(self._q)
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+
+class DeviceLock:
+    """Distributed device lock with data-dependency acquisition priority.
+
+    Workers register a *priority rank* derived from the workflow graph's
+    topological order (parents/producers rank lower = acquire first).
+    ``acquire(worker)`` blocks until the lock is free AND no lower-rank
+    worker is waiting — children can only grab devices after their
+    producers released them, which avoids both contention and deadlock
+    (paper §3.3).  onload/offload hooks fire automatically; the lock skips
+    hooks when the two workers are placed on disjoint devices (placement
+    information from the Controller).
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self._cv = threading.Condition()
+        self._holder: Optional[str] = None
+        self._waiting: Dict[str, int] = {}
+        self._rank: Dict[str, int] = {}
+        self._devices: Dict[str, Tuple[int, ...]] = {}
+        self.acquisitions = 0
+        self.switches = 0  # onload/offload pairs actually performed
+        self._last_holder: Optional[str] = None
+
+    def set_priority(self, worker: str, rank: int,
+                     devices: Tuple[int, ...] = ()) -> None:
+        with self._cv:
+            self._rank[worker] = rank
+            self._devices[worker] = tuple(devices)
+
+    def _shares_devices(self, a: Optional[str], b: str) -> bool:
+        if a is None:
+            return False
+        da, db = set(self._devices.get(a, ())), set(self._devices.get(b, ()))
+        if not da or not db:
+            return True  # unknown placement -> be safe, switch
+        return bool(da & db)
+
+    def acquire(self, worker: str, *, onload: Optional[Callable] = None,
+                timeout: Optional[float] = None) -> bool:
+        deadline = time.time() + timeout if timeout else None
+        with self._cv:
+            self._waiting[worker] = self._rank.get(worker, 0)
+            try:
+                while True:
+                    lowest = min(self._waiting.values())
+                    if (self._holder is None
+                            and self._waiting[worker] == lowest):
+                        break
+                    remaining = (deadline - time.time()) if deadline else None
+                    if remaining is not None and remaining <= 0:
+                        return False
+                    self._cv.wait(timeout=remaining)
+                self._holder = worker
+                self.acquisitions += 1
+                needs_switch = (
+                    self._last_holder != worker
+                    and self._shares_devices(self._last_holder, worker)
+                )
+            finally:
+                self._waiting.pop(worker, None)
+        # hooks run outside the lock's critical section
+        if needs_switch and onload is not None:
+            onload()
+            with self._cv:
+                self.switches += 1
+        return True
+
+    def release(self, worker: str, *, offload: Optional[Callable] = None,
+                next_shares_devices: bool = True) -> None:
+        if offload is not None and next_shares_devices:
+            offload()
+        with self._cv:
+            assert self._holder == worker, (self._holder, worker)
+            self._last_holder = worker
+            self._holder = None
+            self._cv.notify_all()
+
+    def __enter__(self):  # bare context-manager use (tests)
+        self.acquire("anonymous")
+        return self
+
+    def __exit__(self, *exc):
+        self.release("anonymous")

@@ -1,0 +1,129 @@
+"""Controller: ties profiler → scheduler → executor together (Fig. 4).
+
+Responsibilities (paper §3.1): assign workers to accelerators, manage
+inter-worker connections (via the Router), orchestrate the execution flow
+by dispatching function invocations, monitor failures, and expose the
+worker-group-level timers.
+
+``Controller.plan()`` is the M2Flow transformation entry point: it takes
+the traced logical flow + profiles, runs Algorithm 1, and returns an
+execution plan (Schedule tree + placement) that ``execute()`` runs.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.comm.primitives import global_router, reset_router
+from repro.core.channel import Channel
+from repro.core.flowgraph import FlowGraph, GraphTracer
+from repro.core.pipeline import ExecutionFlowManager
+from repro.core.placement import Cluster, split_devices
+from repro.core.profiler import CostModel, Profiler
+from repro.core.scheduler import (
+    Leaf,
+    Pipelined,
+    Scheduler,
+    SchedulerConfig,
+    Temporal,
+    collocated_schedule,
+    disaggregated_schedule,
+    leaves,
+)
+from repro.core.simulator import Simulator
+from repro.core.worker import Worker, WorkerFailure, WorkerGroup
+
+
+@dataclass
+class ExecutionPlan:
+    schedule: Any
+    est_time: float
+    placement: Dict[str, List[int]]
+    mode: str  # "auto" | "collocated" | "disaggregated"
+
+    def pretty(self) -> str:
+        lines = [f"mode={self.mode} est={self.est_time:.2f}s"]
+        lines.append(self.schedule.pretty())
+        for w, devs in self.placement.items():
+            span = f"{devs[0]}..{devs[-1]}" if devs else "-"
+            lines.append(f"  {w}: devices [{span}] ({len(devs)})")
+        return "\n".join(lines)
+
+
+class Controller:
+    def __init__(self, cluster: Cluster,
+                 profiles: Optional[Dict[str, CostModel]] = None,
+                 scheduler_cfg: Optional[SchedulerConfig] = None):
+        self.cluster = cluster
+        self.profiles = profiles or {}
+        self.scheduler_cfg = scheduler_cfg or SchedulerConfig()
+        self.tracer = GraphTracer()
+        self.router = global_router()
+        self._failed: List[WorkerFailure] = []
+        self._kill = threading.Event()
+
+    # ------------------------------------------------------------------
+    # failure monitoring (paper §4)
+    # ------------------------------------------------------------------
+    def report_failure(self, failure: WorkerFailure) -> None:
+        self._failed.append(failure)
+        # kill the whole system quickly to avoid cascading timeout noise
+        self._kill.set()
+
+    @property
+    def failed(self) -> List[WorkerFailure]:
+        return self._failed
+
+    def check_alive(self) -> None:
+        if self._kill.is_set():
+            raise self._failed[0]
+
+    # ------------------------------------------------------------------
+    # M2Flow planning
+    # ------------------------------------------------------------------
+    def plan(self, graph: FlowGraph, *, total_batch: int,
+             mode: str = "auto") -> ExecutionPlan:
+        n = self.cluster.num_devices
+        if mode == "collocated":
+            t, sched = collocated_schedule(graph, self.profiles, n, total_batch)
+        elif mode == "disaggregated":
+            t, sched = disaggregated_schedule(graph, self.profiles, n,
+                                              total_batch)
+        else:
+            sch = Scheduler(self.profiles, self.scheduler_cfg)
+            t, sched = sch.schedule(graph, n, total_batch)
+        placement = self._place(sched, list(range(n)))
+        return ExecutionPlan(schedule=sched, est_time=t, placement=placement,
+                             mode=mode)
+
+    def _place(self, sched, devices: List[int]) -> Dict[str, List[int]]:
+        """Spatial stages get disjoint device slices; temporal stages share."""
+        out: Dict[str, List[int]] = {}
+        if isinstance(sched, Leaf):
+            out[sched.worker] = devices[: sched.devices] or devices
+            return out
+        if isinstance(sched, Temporal):
+            out.update(self._place(sched.s, devices))
+            out.update(self._place(sched.t, devices))
+            return out
+        if isinstance(sched, Pipelined):
+            n_s = sum(l.devices for l in leaves(sched.s))
+            out.update(self._place(sched.s, devices[:n_s]))
+            out.update(self._place(sched.t, devices[n_s:]))
+            return out
+        raise TypeError(type(sched))
+
+    # ------------------------------------------------------------------
+    def simulate(self, plan: ExecutionPlan, total_batch: int):
+        sim = Simulator(self.profiles)
+        return sim.run(plan.schedule, total_batch)
+
+    def execute(self, plan: ExecutionPlan, workers: Dict[str, Any],
+                task_fns: Dict[str, Callable], batch) -> Any:
+        mgr = ExecutionFlowManager(workers, task_fns)
+        out = mgr.run(plan.schedule, batch)
+        self.last_timeline = mgr.timeline
+        self.last_time = mgr.total_time
+        return out

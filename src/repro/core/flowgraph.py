@@ -1,0 +1,138 @@
+"""Workflow graph: JIT extraction from traced communication + s-t cuts.
+
+The graph is extracted just-in-time during the profiling run: every
+channel ``put``/``get`` is traced as (producer → channel → consumer), and
+weight-update synchronization edges are added by the runner.  Cycles
+(embodied sim ↔ generation, deep-research tool loops) are collapsed into
+single nodes before scheduling (paper Algorithm 1 line 2).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
+
+import networkx as nx
+
+
+@dataclass(frozen=True)
+class TraceEvent:
+    kind: str  # "put" | "get"
+    worker: str
+    channel: str
+    t: float
+    nbytes: int = 0
+
+
+class FlowGraph:
+    """Directed workflow graph over worker (group) names."""
+
+    def __init__(self):
+        self.g = nx.DiGraph()
+
+    # -- construction ------------------------------------------------------
+    def add_worker(self, name: str, **attrs) -> None:
+        self.g.add_node(name, **attrs)
+
+    def add_edge(self, src: str, dst: str, *, channel: str = "",
+                 nbytes: int = 0) -> None:
+        self.g.add_edge(src, dst, channel=channel, nbytes=nbytes)
+
+    @classmethod
+    def from_trace(cls, events: Sequence[TraceEvent]) -> "FlowGraph":
+        fg = cls()
+        producers: Dict[str, Set[str]] = {}
+        consumers: Dict[str, Set[str]] = {}
+        traffic: Dict[str, int] = {}
+        for ev in events:
+            fg.add_worker(ev.worker)
+            d = producers if ev.kind == "put" else consumers
+            d.setdefault(ev.channel, set()).add(ev.worker)
+            traffic[ev.channel] = traffic.get(ev.channel, 0) + ev.nbytes
+        for ch in set(producers) | set(consumers):
+            for p in producers.get(ch, ()):
+                for c in consumers.get(ch, ()):
+                    if p != c:
+                        fg.add_edge(p, c, channel=ch,
+                                    nbytes=traffic.get(ch, 0))
+        return fg
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def nodes(self) -> List[str]:
+        return list(self.g.nodes)
+
+    def edges(self) -> List[Tuple[str, str]]:
+        return list(self.g.edges)
+
+    def successors(self, n: str) -> List[str]:
+        return list(self.g.successors(n))
+
+    # -- cycle collapse (ConvertCircleToNode) ---------------------------------
+    def condense(self) -> Tuple["FlowGraph", Dict[str, Tuple[str, ...]]]:
+        """Collapse strongly-connected components into single nodes.
+
+        Returns (dag, members) where members maps the collapsed node name
+        to its original workers.  Collapsed nodes are later scheduled by
+        even device partitioning (paper §3.4 last paragraph).
+        """
+        comp = nx.condensation(self.g)
+        dag = FlowGraph()
+        members: Dict[str, Tuple[str, ...]] = {}
+        names: Dict[int, str] = {}
+        for cid, data in comp.nodes(data=True):
+            ms = tuple(sorted(data["members"]))
+            name = ms[0] if len(ms) == 1 else "cycle(" + "+".join(ms) + ")"
+            names[cid] = name
+            members[name] = ms
+            dag.add_worker(name)
+        for a, b in comp.edges:
+            dag.add_edge(names[a], names[b])
+        return dag, members
+
+    # -- s-t cuts ---------------------------------------------------------------
+    def st_cuts(self) -> Iterable[Tuple[FrozenSet[str], FrozenSet[str]]]:
+        """Enumerate ordered 2-partitions (G_s, G_t) with every edge going
+        s→t (i.e. G_s is a down-set of the DAG) — the s-t cuts of
+        Algorithm 1 line 12.  Exponential in nodes; workflow graphs have
+        ≤ ~8 components."""
+        nodes = list(nx.topological_sort(self.g))
+        n = len(nodes)
+        ancestors = {v: nx.ancestors(self.g, v) for v in nodes}
+        seen = set()
+        for r in range(1, n):
+            for combo in itertools.combinations(nodes, r):
+                s = frozenset(combo)
+                if s in seen:
+                    continue
+                seen.add(s)
+                # closed under ancestors?
+                if any(not ancestors[v] <= s for v in s):
+                    continue
+                t = frozenset(set(nodes) - s)
+                yield s, t
+
+    def subgraph(self, nodes: Iterable[str]) -> "FlowGraph":
+        fg = FlowGraph()
+        fg.g = self.g.subgraph(nodes).copy()
+        return fg
+
+    def key(self) -> FrozenSet[str]:
+        return frozenset(self.g.nodes)
+
+    def __repr__(self) -> str:
+        return f"FlowGraph({list(self.g.nodes)}, edges={list(self.g.edges)})"
+
+
+class GraphTracer:
+    """Collects TraceEvents during a profiling execution of the workflow."""
+
+    def __init__(self):
+        self.events: List[TraceEvent] = []
+
+    def record(self, kind: str, worker: str, channel: str, t: float,
+               nbytes: int = 0) -> None:
+        self.events.append(TraceEvent(kind, worker, channel, t, nbytes))
+
+    def graph(self) -> FlowGraph:
+        return FlowGraph.from_trace(self.events)

@@ -1,0 +1,157 @@
+"""Execution Flow Manager: M2Flow transformation of a logical task stream.
+
+Given the schedule chosen by the scheduler, this module re-chunks worker
+tasks to the scheduled data granularity (elastic pipelining, §3.3) and
+drives the real workers through channels:
+
+  * ``split``  — a task over batch B becomes B/m sub-tasks of size m,
+    letting downstream workers start earlier;
+  * ``coalesce`` — sub-results are re-assembled when a consumer needs a
+    coarser granularity (e.g. the trainer's global batch for the update);
+  * temporal stages run under the channel's device lock so context
+    switching is automatic and deadlock-free.
+
+This is the *real* executor (threads + JAX on this host); the discrete-
+event Simulator mirrors its behaviour at production scale.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.channel import Channel, ChannelClosed
+from repro.core.scheduler import Leaf, Pipelined, Temporal, leaves
+
+
+def split_batch(batch: Dict[str, np.ndarray], m: int) -> List[Dict[str, np.ndarray]]:
+    """Split a dict-of-arrays batch into chunks of size m along dim 0."""
+    B = next(iter(batch.values())).shape[0]
+    assert B % m == 0, (B, m)
+    out = []
+    for i in range(0, B, m):
+        out.append({k: v[i:i + m] for k, v in batch.items()})
+    return out
+
+
+def coalesce(chunks: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray]:
+    """Re-assemble chunk results; non-batch values (metrics dicts, scalars)
+    keep the last chunk's value."""
+    out: Dict[str, Any] = {}
+    for k in chunks[0].keys():
+        vals = [c[k] for c in chunks]
+        first = vals[0]
+        if isinstance(first, np.ndarray) and first.ndim >= 1:
+            out[k] = np.concatenate(vals, axis=0)
+        else:
+            out[k] = vals[-1]
+    return out
+
+
+@dataclass
+class StagePlan:
+    """One executable stage: a worker task at a data granularity."""
+    worker: str
+    fn: str
+    granularity: int
+    devices: int
+    shares_devices_with_next: bool = False
+
+
+class ExecutionFlowManager:
+    """Runs a Schedule tree over real workers.
+
+    workers: name -> object exposing the task fn(chunk)->chunk interface
+             plus onload/offload (repro.core.worker.Worker API).
+    """
+
+    def __init__(self, workers: Dict[str, Any],
+                 task_fns: Dict[str, Callable[[Any, Dict], Dict]]):
+        self.workers = workers
+        self.task_fns = task_fns
+        self.timeline: List[Tuple[str, float, float, int]] = []
+        self._tl_lock = threading.Lock()
+
+    def _record(self, worker: str, t0: float, t1: float, chunk: int) -> None:
+        with self._tl_lock:
+            self.timeline.append((worker, t0, t1, chunk))
+
+    # ------------------------------------------------------------------
+    def run(self, sched, batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        t0 = time.perf_counter()
+        out = self._run(sched, batch)
+        self.total_time = time.perf_counter() - t0
+        return out
+
+    def _apply(self, worker_name: str, chunk: Dict, idx: int) -> Dict:
+        w = self.workers[worker_name]
+        fn = self.task_fns[worker_name]
+        if getattr(w, "offloaded", False):
+            w.onload()
+        t0 = time.perf_counter()
+        out = fn(w, chunk)
+        self._record(worker_name, t0, time.perf_counter(), idx)
+        return out
+
+    def _run(self, sched, batch: Dict) -> Dict:
+        if isinstance(sched, Leaf):
+            return self._apply(sched.worker, batch, -1)
+
+        if isinstance(sched, Temporal):
+            mid = self._run(sched.s, batch)
+            # context switch: offload all of s's workers, onload t's lazily
+            for lf in leaves(sched.s):
+                w = self.workers.get(lf.worker)
+                if w is not None and not set(
+                        getattr(w, "devices", ())).isdisjoint(
+                        self._devices_of(sched.t)):
+                    w.offload()
+            return self._run(sched.t, mid)
+
+        if isinstance(sched, Pipelined):
+            m = sched.granularity
+            chunks = split_batch(batch, m)
+            ch = Channel.create(f"pipe-{id(sched)}-{time.time_ns()}")
+            results: List[Optional[Dict]] = [None] * len(chunks)
+            err: List[BaseException] = []
+
+            def producer():
+                try:
+                    for i, c in enumerate(chunks):
+                        out = self._run(sched.s, c)
+                        ch.put((i, out))
+                finally:
+                    ch.close()
+
+            def consumer():
+                try:
+                    while True:
+                        try:
+                            i, c = ch.get()
+                        except ChannelClosed:
+                            break
+                        results[i] = self._run(sched.t, c)
+                except BaseException as e:  # noqa: BLE001
+                    err.append(e)
+
+            tp = threading.Thread(target=producer, daemon=True)
+            tc = threading.Thread(target=consumer, daemon=True)
+            tp.start(); tc.start()
+            tp.join(); tc.join()
+            if err:
+                raise err[0]
+            done = [r for r in results if r is not None]
+            return coalesce(done) if done else {}
+
+        raise TypeError(type(sched))
+
+    def _devices_of(self, sched) -> set:
+        out = set()
+        for lf in leaves(sched):
+            w = self.workers.get(lf.worker)
+            if w is not None:
+                out |= set(getattr(w, "devices", ()))
+        return out

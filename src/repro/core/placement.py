@@ -1,0 +1,72 @@
+"""Cluster + flexible device allocation (paper §4).
+
+Ray only offers packed/spread placement; RLinf lets any worker claim any
+device(s) by global ID.  We model the cluster as a flat list of global
+device IDs (node i, local device j -> global id i*devices_per_node + j)
+with explicit allocate/free and an occupancy map so temporal multiplexing
+(two workers on the same device at different times) is expressible.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+
+@dataclass
+class Cluster:
+    num_nodes: int = 1
+    devices_per_node: int = 8
+    _allocations: Dict[str, List[int]] = field(default_factory=dict)
+    _cursor: int = 0
+
+    @property
+    def num_devices(self) -> int:
+        return self.num_nodes * self.devices_per_node
+
+    def node_of(self, global_id: int) -> int:
+        return global_id // self.devices_per_node
+
+    # -- allocation ---------------------------------------------------------
+    def allocate(self, owner: str, count: int,
+                 *, device_ids: Optional[Sequence[int]] = None,
+                 exclusive: bool = False) -> List[int]:
+        """Allocate ``count`` devices; arbitrary global IDs may be pinned.
+        Non-exclusive allocations may overlap (temporal multiplexing)."""
+        if device_ids is not None:
+            ids = list(device_ids)
+            assert len(ids) == count
+        else:
+            ids = [(self._cursor + i) % self.num_devices for i in range(count)]
+            self._cursor = (self._cursor + count) % self.num_devices
+        if exclusive:
+            taken = self.occupancy()
+            for i in ids:
+                if taken.get(i):
+                    raise ValueError(f"device {i} already exclusively held")
+        self._allocations.setdefault(owner, []).extend(ids)
+        return ids
+
+    def free(self, owner: str) -> None:
+        self._allocations.pop(owner, None)
+
+    def occupancy(self) -> Dict[int, List[str]]:
+        occ: Dict[int, List[str]] = {}
+        for owner, ids in self._allocations.items():
+            for i in ids:
+                occ.setdefault(i, []).append(owner)
+        return occ
+
+    def collocated(self, a: str, b: str) -> bool:
+        da = set(self._allocations.get(a, ()))
+        db = set(self._allocations.get(b, ()))
+        return bool(da & db)
+
+
+def split_devices(n_devices: int, shares: Sequence[int]) -> List[List[int]]:
+    """Partition [0..n) into contiguous groups of the given sizes."""
+    assert sum(shares) <= n_devices, (shares, n_devices)
+    out, cur = [], 0
+    for s in shares:
+        out.append(list(range(cur, cur + s)))
+        cur += s
+    return out

@@ -1,0 +1,259 @@
+"""Worker abstraction + WorkerGroup SPMD dispatch (paper §3.2).
+
+A Worker encapsulates one RL component (rollout, inference, actor train,
+simulator, reward...).  The base class provides:
+
+  * ``send/recv`` — adaptive point-to-point comm via the global Router;
+  * ``onload/offload`` — resource management hooks; the default
+    implementation moves the worker's registered state pytrees between
+    device and host memory (the CPU↔GPU swap of the paper, realized as
+    ``jax.device_put`` / ``jax.device_get``);
+  * built-in per-call timing, feeding the profiler/scheduler.
+
+``WorkerGroup`` launches N worker processes (threads here; Ray actors in
+the paper) and dispatches public method calls to all or a subset of them,
+returning asynchronous :class:`FutureHandle` s whose ``wait()`` is the
+synchronization barrier of the programming model (Fig. 5b).
+"""
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.comm.primitives import global_router
+
+
+class WorkerFailure(RuntimeError):
+    def __init__(self, worker: str, exc: BaseException, tb: str):
+        super().__init__(f"worker {worker} failed: {exc!r}\n{tb}")
+        self.worker = worker
+        self.original = exc
+
+
+@dataclass
+class TimerRecord:
+    fn: str
+    start: float
+    elapsed: float
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+class Worker:
+    """Base RL component. Subclasses implement task methods that read from
+    in-channels and write to out-channels (see repro.rl.workers)."""
+
+    def __init__(self, name: str, *, devices: Sequence[int] = (),
+                 process_index: int = 0):
+        self.name = name
+        self.devices = tuple(devices)
+        self.process_index = process_index
+        self.router = global_router()
+        self.router.register(name, devices=list(devices))
+        self._state: Dict[str, Any] = {}  # registered device state
+        self._host_state: Dict[str, Any] = {}
+        self.offloaded = False
+        self.timers: List[TimerRecord] = []
+        self._timer_lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    # communication (paper: send/recv primitives)
+    # ------------------------------------------------------------------
+    def send(self, obj: Any, dst: str, async_op: bool = True):
+        return self.router.send(self.name, dst, obj, async_op=async_op)
+
+    def recv(self, src: str, timeout: Optional[float] = None) -> Any:
+        return self.router.recv(self.name, src, timeout=timeout)
+
+    # ------------------------------------------------------------------
+    # resource management (paper: onload/offload for context switching)
+    # ------------------------------------------------------------------
+    def register_state(self, key: str, tree: Any) -> None:
+        self._state[key] = tree
+
+    def get_state(self, key: str) -> Any:
+        if self.offloaded:
+            self.onload()
+        return self._state[key]
+
+    def set_state(self, key: str, tree: Any) -> None:
+        # a fresh write supersedes any offloaded copy of this key —
+        # otherwise the next onload() would clobber it with stale state
+        # (e.g. weight sync into an offloaded rollout/inference worker)
+        self._state[key] = tree
+        self._host_state.pop(key, None)
+
+    def state_bytes(self) -> int:
+        total = 0
+        for tree in self._state.values():
+            for l in jax.tree_util.tree_leaves(tree):
+                if hasattr(l, "nbytes"):
+                    total += int(l.nbytes)
+        return total
+
+    def offload(self) -> None:
+        """Move registered device state to host memory (frees accelerator)."""
+        if self.offloaded:
+            return
+        for k, tree in self._state.items():
+            self._host_state[k] = jax.tree_util.tree_map(
+                lambda x: np.asarray(x) if isinstance(x, jax.Array) else x,
+                tree,
+            )
+        self._state = {k: None for k in self._state}
+        self.offloaded = True
+
+    def onload(self) -> None:
+        """Restore host state onto the device."""
+        if not self.offloaded:
+            return
+        for k, tree in self._host_state.items():
+            self._state[k] = jax.tree_util.tree_map(
+                lambda x: jax.device_put(x) if isinstance(x, np.ndarray) else x,
+                tree,
+            )
+        self._host_state = {}
+        self.offloaded = False
+
+    # ------------------------------------------------------------------
+    def _timed(self, fn_name: str, fn: Callable, *args, **kw):
+        t0 = time.perf_counter()
+        try:
+            out = fn(*args, **kw)
+            return out
+        finally:
+            el = time.perf_counter() - t0
+            with self._timer_lock:
+                self.timers.append(TimerRecord(fn=fn_name, start=t0, elapsed=el))
+
+    def timer_values(self, fn: Optional[str] = None) -> List[float]:
+        with self._timer_lock:
+            return [t.elapsed for t in self.timers if fn is None or t.fn == fn]
+
+    def shutdown(self) -> None:
+        self.router.deregister(self.name)
+
+
+class FutureHandle:
+    """Async result of a WorkerGroup dispatch; ``wait()`` = barrier."""
+
+    def __init__(self, futures: List[Future], group: "WorkerGroup",
+                 fn_name: str):
+        self._futures = futures
+        self._group = group
+        self._fn = fn_name
+        self._t0 = time.perf_counter()
+
+    def wait(self, timeout: Optional[float] = None) -> List[Any]:
+        out = []
+        for f in self._futures:
+            out.append(f.result(timeout=timeout))
+        return out
+
+    def done(self) -> bool:
+        return all(f.done() for f in self._futures)
+
+    # worker-group-level timer (paper §4 Performance Profiling): reduced
+    # over processes with a chosen reduction
+    def timing(self, reduce: str = "max") -> float:
+        self.wait()
+        vals = []
+        for w in self._group.workers:
+            ts = w.timer_values(self._fn)
+            if ts:
+                vals.append(ts[-1])
+        if not vals:
+            return 0.0
+        return {"max": max, "min": min,
+                "mean": lambda v: sum(v) / len(v)}[reduce](vals)
+
+
+class WorkerGroup:
+    """All processes of one worker, dispatched collectively (paper §3.2)."""
+
+    def __init__(self, workers: List[Worker]):
+        assert workers
+        self.workers = workers
+        self.name = workers[0].name.rsplit("/", 1)[0]
+        self._pool = ThreadPoolExecutor(
+            max_workers=len(workers),
+            thread_name_prefix=f"wg-{self.name}")
+        self._failure_handlers: List[Callable[[WorkerFailure], None]] = []
+
+    @classmethod
+    def launch(cls, worker_cls, cluster, *, count: int = 1,
+               devices_per_worker: Optional[List[Sequence[int]]] = None,
+               **worker_kw) -> "WorkerGroup":
+        """SPMD launch on a cluster; placement may be decided by the
+        scheduler or specified manually (paper §4 device allocation)."""
+        workers = []
+        for i in range(count):
+            devs = (devices_per_worker[i]
+                    if devices_per_worker is not None else
+                    cluster.allocate(worker_cls.__name__, 1))
+            w = worker_cls(
+                name=f"{worker_cls.__name__}/{i}",
+                devices=devs, process_index=i, **worker_kw)
+            workers.append(w)
+        return cls(workers)
+
+    def on_failure(self, handler: Callable[[WorkerFailure], None]) -> None:
+        self._failure_handlers.append(handler)
+
+    def _wrap(self, w: Worker, fn_name: str, args, kw):
+        """Failure handler wrapper (paper §4 failure monitoring): catches
+        exceptions, reports, and re-raises so the controller can kill the
+        whole workflow instead of hanging on timeouts."""
+        def run():
+            try:
+                fn = getattr(w, fn_name)
+                return w._timed(fn_name, fn, *args, **kw)
+            except BaseException as e:  # noqa: BLE001
+                failure = WorkerFailure(w.name, e, traceback.format_exc())
+                for h in self._failure_handlers:
+                    h(failure)
+                raise failure from e
+        return run
+
+    def call(self, fn_name: str, *args, subset: Optional[List[int]] = None,
+             per_worker_args: Optional[List[tuple]] = None,
+             **kw) -> FutureHandle:
+        targets = (self.workers if subset is None
+                   else [self.workers[i] for i in subset])
+        futures = []
+        for i, w in enumerate(targets):
+            a = per_worker_args[i] if per_worker_args is not None else args
+            futures.append(self._pool.submit(self._wrap(w, fn_name, a, kw)))
+        return FutureHandle(futures, self, fn_name)
+
+    def __getattr__(self, item: str):
+        # dispatch public worker methods: group.generate(...) etc.
+        if item.startswith("_"):
+            raise AttributeError(item)
+        probe = getattr(type(self.workers[0]), item, None)
+        if probe is None or not callable(probe):
+            raise AttributeError(item)
+
+        def dispatch(*args, **kw):
+            return self.call(item, *args, **kw)
+
+        return dispatch
+
+    def offload_all(self) -> None:
+        for w in self.workers:
+            w.offload()
+
+    def onload_all(self) -> None:
+        for w in self.workers:
+            w.onload()
+
+    def shutdown(self) -> None:
+        for w in self.workers:
+            w.shutdown()
+        self._pool.shutdown(wait=False)

@@ -1,0 +1,75 @@
+"""Grouped (per-expert) matmul Pallas TPU kernel for MoE FFN.
+
+Computes out[e] = buf[e] @ w[e] for every expert e over the capacity-
+dispatched token buffer — the compute hot-spot of the MoE block after
+dispatch.  Grid: (E, C/bc, F/bf, D/bd) with the contraction dimension
+sequential and a VMEM f32 accumulator.
+
+Layouts:
+  buf: (E, C, D)   block (1, bc, bd)
+  w:   (E, D, F)   block (1, bd, bf)
+  out: (E, C, F)   block (1, bc, bf)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(buf_ref, w_ref, o_ref, acc_scr, *, num_d_blocks: int):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    b = buf_ref[0].astype(jnp.float32)  # (bc, bd)
+    w = w_ref[0].astype(jnp.float32)  # (bd, bf)
+    acc_scr[...] += jnp.dot(b, w, preferred_element_type=jnp.float32)
+
+    @pl.when(di == num_d_blocks - 1)
+    def _finalize():
+        o_ref[0, :, :] = acc_scr[...].astype(o_ref.dtype)
+
+
+def grouped_matmul(
+    buf: jax.Array,  # (E, C, D)
+    w: jax.Array,  # (E, D, F)
+    *,
+    block_c: int = 128,
+    block_d: int = 512,
+    block_f: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    E, C, D = buf.shape
+    F = w.shape[-1]
+    block_c = min(block_c, C)
+    block_d = min(block_d, D)
+    block_f = min(block_f, F)
+    assert C % block_c == 0 and D % block_d == 0 and F % block_f == 0, (
+        (C, D, F), (block_c, block_d, block_f))
+    nc, nd, nf = C // block_c, D // block_d, F // block_f
+    kernel = functools.partial(_gmm_kernel, num_d_blocks=nd)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, nc, nf, nd),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d),
+                         lambda e, ci, fi, di: (e, ci, di)),
+            pl.BlockSpec((1, block_d, block_f),
+                         lambda e, ci, fi, di: (e, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, ci, fi, di: (e, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), buf.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(buf, w)

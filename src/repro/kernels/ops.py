@@ -1,0 +1,61 @@
+"""Jit-friendly wrappers dispatching model layouts onto the Pallas kernels.
+
+On this CPU container kernels always run with ``interpret=True`` (the
+Pallas interpreter executes the kernel body on CPU for correctness); on a
+real TPU backend set ``repro.kernels.ops.INTERPRET = False`` (or rely on
+the automatic backend check) to compile them with Mosaic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import moe_gmm as _gmm
+from repro.kernels import ssd_scan as _ssd
+
+# interpret=True whenever we're not actually on TPU
+INTERPRET: Optional[bool] = None
+
+
+def _interpret() -> bool:
+    if INTERPRET is not None:
+        return INTERPRET
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    """Model layout (B, S, H, D) / (B, S, KV, D) -> (B, S, H, D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _fa.flash_attention_bhsd(
+        qt, kt, vt, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, D, chunk: int):
+    """Model layout (see models.ssm.mamba2_block):
+    x (B, L, H, P), dt (B, L, H), A (H,), Bm/Cm (B, L, N), D (H,)."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    assert L % chunk == 0
+    nc = L // chunk
+    xk = x.reshape(B, nc, chunk, H, P).transpose(0, 3, 1, 2, 4)
+    dtk = dt.reshape(B, nc, chunk, H).transpose(0, 3, 1, 2)
+    Bk = Bm.reshape(B, nc, chunk, N)
+    Ck = Cm.reshape(B, nc, chunk, N)
+    Ab = jnp.broadcast_to(A[None, :], (B, H))
+    Db = jnp.broadcast_to(D[None, :], (B, H))
+    y = _ssd.ssd_scan_bhcsp(xk, dtk, Ab, Bk, Ck, Db,
+                            interpret=_interpret())
+    # back to (B, L, H, P)
+    return y.transpose(0, 2, 3, 1, 4).reshape(B, L, H, P)
+
+
+def grouped_matmul(buf, w, **kw):
+    return _gmm.grouped_matmul(buf, w, interpret=_interpret(), **kw)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q (B, H, S, D); k/v (B, KV, S, D) -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf)
+    s = s / jnp.sqrt(jnp.float32(D))
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, D):
+    """Oracle matching ssd_scan_bhcsp layouts.
+
+    x (B, H, nc, s, P); dt (B, H, nc, s); A/D (B, H); Bm/Cm (B, nc, s, N).
+    Sequential state recurrence — obviously correct, O(L) steps.
+    """
+    B, H, nc, s, P = x.shape
+    N = Bm.shape[-1]
+    L = nc * s
+    xf = x.astype(jnp.float32).transpose(0, 2, 3, 1, 4).reshape(B, L, H, P)
+    dtf = dt.astype(jnp.float32).transpose(0, 2, 3, 1).reshape(B, L, H)
+    Bf = Bm.astype(jnp.float32).reshape(B, L, N)
+    Cf = Cm.astype(jnp.float32).reshape(B, L, N)
+
+    def step(state, inp):
+        xi, dti, Bi, Ci = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dti * A)  # (B,H)
+        upd = dti[..., None, None] * xi[..., None] * Bi[:, None, None, :]
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, Ci)
+        return state, y
+
+    init = jnp.zeros((B, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+         jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1)  # (B, L, H, P)
+    y = y + xf * D[:, None, :, None]
+    y = y.reshape(B, nc, s, H, P).transpose(0, 3, 1, 2, 4)
+    return y.astype(x.dtype)
+
+
+def grouped_matmul_ref(buf, w):
+    return jnp.einsum(
+        "ecd,edf->ecf", buf.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(buf.dtype)

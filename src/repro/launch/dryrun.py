@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST be the first statements in this module —
+# jax locks the device count on first init — which is why the docstring
+# below is a plain string and __future__ imports are omitted.
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and only the dry-run should see 512 placeholder devices.
+
+For each case we record memory_analysis (fits-on-chip proof),
+cost_analysis (FLOPs/bytes for §Roofline) and the collective schedule
+parsed from the compiled HLO, into experiments/dryrun/*.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape, list_archs
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.train import TrainHParams, init_adamw, make_serve_step, make_train_step
+from repro.train import trainer as trainer_mod
+from repro.train.sharding_rules import (
+    array_batch_specs,
+    decode_state_specs,
+    param_specs,
+)
+from repro.utils.hlo_analysis import analyze as analyze_hlo
+from repro.utils.roofline import RooflineReport, model_flops
+from repro.utils.sharding import MODEL, batch_axes, maybe_axis, set_active_mesh
+
+ASSIGNED_ARCHS = [
+    "granite-moe-3b-a800m",
+    "zamba2-2.7b",
+    "whisper-large-v3",
+    "llama4-scout-17b-a16e",
+    "llama-3.2-vision-90b",
+    "codeqwen1.5-7b",
+    "mamba2-370m",
+    "yi-9b",
+    "mistral-large-123b",
+    "stablelm-12b",
+]
+SHAPE_NAMES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Per-case configuration policy
+# ---------------------------------------------------------------------------
+def arch_for_shape(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """long_500k uses the sub-quadratic variant: sliding-window (8192) for
+    attention archs; SSM/hybrid archs are O(1)-state already."""
+    if shape.name == "long_500k" and cfg.num_heads and cfg.kind != "hybrid":
+        return cfg.replace(sliding_window=8192)
+    return cfg
+
+
+def hparams_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                *, n_micro: Optional[int] = None,
+                seq_parallel: bool = True) -> TrainHParams:
+    if n_micro is None:
+        # activation memory scales with d_model·depth; deeper/wider models
+        # need more microbatches (see EXPERIMENTS.md §Perf for tuning)
+        act_cost = cfg.d_model * cfg.num_layers
+        if act_cost >= 500_000:
+            n_micro = 16
+        elif act_cost >= 120_000:
+            n_micro = 8
+        else:
+            n_micro = 4
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= mesh.shape.get(a, 1)
+    # keep per-microbatch batch divisible by the dp axis
+    while n_micro > 1 and (shape.global_batch // n_micro) % dp != 0:
+        n_micro //= 2
+    act_spec = None
+    if seq_parallel and shape.seq_len % mesh.shape.get(MODEL, 1) == 0:
+        bax = batch_axes(mesh)
+        act_spec = P(bax, MODEL, None)
+    return TrainHParams(n_microbatches=max(n_micro, 1), remat=True,
+                        act_spec=act_spec)
+
+
+# ---------------------------------------------------------------------------
+# input_specs
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _with_shardings(tree_sds, tree_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        tree_sds, tree_specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+
+
+def params_sds(cfg: ModelConfig, mesh: Mesh, dtype=jnp.bfloat16):
+    sds = jax.eval_shape(
+        lambda: M.init_model(jax.random.PRNGKey(0), cfg, dtype))
+    return _with_shardings(sds, param_specs(mesh, cfg, sds), mesh)
+
+
+def batch_sds(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "old_logprobs": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        "advantages": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+    }
+    if cfg.kind == "vlm":
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.kind == "encdec":
+        batch["frame_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    return _with_shardings(batch, array_batch_specs(mesh, batch), mesh)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                hp: Optional[TrainHParams] = None,
+                cache_dtype=jnp.bfloat16, decode_unroll: int = 1):
+    """Returns (step_fn, args tuple of ShapeDtypeStructs, donate_argnums)."""
+    cfg = arch_for_shape(cfg, shape)
+    hp = hp or hparams_for(cfg, shape, mesh)
+    if shape.phase == "train":
+        pv = params_sds(cfg, mesh)
+        opt = jax.eval_shape(init_adamw, pv)
+        opt = _with_shardings(
+            opt,
+            jax.tree_util.tree_map(
+                lambda s: s.sharding.spec if hasattr(s, "sharding") and s.sharding
+                else P(), opt),
+            mesh,
+        )
+        # moments mirror param shardings; step scalar replicated
+        opt = opt._replace(
+            mu=_with_shardings(opt.mu, param_specs(mesh, cfg, opt.mu), mesh),
+            nu=_with_shardings(opt.nu, param_specs(mesh, cfg, opt.nu), mesh),
+            step=_sds((), jnp.int32, mesh, P()),
+        )
+        batch = batch_sds(cfg, shape, mesh)
+        if hp.grad_specs is None:
+            hp = hp._replace(grad_specs=param_specs(mesh, cfg, pv))
+        step = make_train_step(cfg, hp)
+        return step, (pv, opt, batch), (0, 1)
+
+    if shape.phase == "prefill":
+        pv = params_sds(cfg, mesh)
+        batch = batch_sds(cfg, shape, mesh)
+        step = trainer_mod.make_prefill_step(cfg, hp)
+        return step, (pv, batch), ()
+
+    # decode
+    pv = params_sds(cfg, mesh)
+    B = shape.global_batch
+    state_sds = jax.eval_shape(
+        lambda: M.init_decode_state(cfg, B, shape.seq_len, cache_dtype))
+    state = _with_shardings(state_sds, decode_state_specs(mesh, cfg, state_sds),
+                            mesh)
+    bax = maybe_axis(mesh, B, batch_axes(mesh))
+    token = _sds((B, 1), jnp.int32, mesh, P(bax, None))
+    pos = _sds((), jnp.int32, mesh, P())
+    step = make_serve_step(cfg, unroll=decode_unroll)
+    return step, (pv, token, state, pos), (2,)
+
+
+# ---------------------------------------------------------------------------
+# Run one case
+# ---------------------------------------------------------------------------
+def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
+             hp: Optional[TrainHParams] = None,
+             cache_dtype=jnp.bfloat16, decode_unroll: int = 1,
+             cfg_transform=None,
+             save: bool = True, verbose: bool = True,
+             tag: str = "") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    set_active_mesh(mesh)
+    try:
+        step, args, donate = input_specs(cfg, shape, mesh, hp,
+                                         cache_dtype=cache_dtype,
+                                         decode_unroll=decode_unroll)
+        with mesh:
+            lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+    finally:
+        set_active_mesh(None)
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()  # per-body XLA numbers (no trip counts)
+    hlo = analyze_hlo(compiled.as_text())  # trip-count-aware (per device)
+    rep = RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=hlo.flops,
+        hlo_bytes=hlo.bytes,
+        collective_bytes=hlo.collective_bytes,
+        model_flops=model_flops(cfg, shape),
+        arg_bytes=int(mem.argument_size_in_bytes),
+        temp_bytes=int(mem.temp_size_in_bytes),
+        collective_counts=hlo.collective_counts,
+    ).finalize()
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_est_bytes": int(mem.argument_size_in_bytes)
+            + int(mem.temp_size_in_bytes)
+            + int(mem.output_size_in_bytes) - int(mem.alias_size_in_bytes),
+        },
+        "cost_xla": {k: float(v) for k, v in cost.items()
+                     if k in ("flops", "bytes accessed", "transcendentals")},
+        "hlo": {"flops": hlo.flops, "bytes": hlo.bytes,
+                "dot_flops": hlo.dot_flops, "conv_flops": hlo.conv_flops,
+                "unknown_trip_loops": hlo.unknown_trip_loops},
+        "collectives": {"counts": hlo.collective_counts,
+                        "bytes_by_kind": hlo.collective_bytes_by_kind,
+                        "total_bytes": hlo.collective_bytes},
+        "roofline": {
+            "compute_s": rep.compute_s, "memory_s": rep.memory_s,
+            "collective_s": rep.collective_s, "dominant": rep.dominant,
+            "model_flops": rep.model_flops,
+            "useful_flops_ratio": rep.useful_flops_ratio,
+        },
+    }
+    if verbose:
+        hbm = result["memory"]["peak_est_bytes"] / 2**30
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name}"
+              f"  lower={t_lower:.1f}s compile={t_compile:.1f}s"
+              f"  peak≈{hbm:.2f}GiB/chip  dom={rep.dominant}")
+        print("         " + rep.row())
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fn = os.path.join(OUT_DIR, f"{arch}_{shape_name}_{mesh_name}{suffix}.json")
+        with open(fn, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if args.arch is None else [args.arch]
+    shapes = SHAPE_NAMES if args.shape is None else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_case(arch, shape, multi_pod=mp)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nALL DRY-RUN CASES PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.models.model import (  # noqa: F401
+    DecodeState,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_model,
+    precompute_cross_caches,
+    prefill,
+)

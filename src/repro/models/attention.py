@@ -1,0 +1,273 @@
+"""Attention: GQA/MHA, causal/bidirectional/sliding-window/cross + decode.
+
+Layouts:
+  hidden      (B, S, d_model)
+  q           (B, S, H, hd)
+  k/v         (B, S, KV, hd)
+  kv cache    (B, W, KV, hd) with a parallel ``positions`` array (B, W)
+              recording the absolute position held by each slot (ring
+              buffer when sliding_window > 0).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    Params,
+    apply_rope,
+    dense_init,
+    init_rmsnorm,
+    rmsnorm,
+)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, dtype) -> Params:
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(k1, (cfg.d_model, cfg.num_heads, hd), dtype),
+        "wk": dense_init(k2, (cfg.d_model, cfg.num_kv_heads, hd), dtype),
+        "wv": dense_init(k3, (cfg.d_model, cfg.num_kv_heads, hd), dtype),
+        "wo": dense_init(k4, (cfg.num_heads, hd, cfg.d_model), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def qkv_project(
+    p: Params, cfg: ModelConfig, x: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product with GQA
+# ---------------------------------------------------------------------------
+def sdpa(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KV, hd)
+    v: jax.Array,  # (B, Sk, KV, hd)
+    mask: Optional[jax.Array] = None,  # (B, 1|H, Sq, Sk) or (Sq, Sk), additive
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    groups = H // KV
+    if k.dtype != q.dtype:  # e.g. fp8-quantized KV cache storage
+        k = k.astype(q.dtype)
+        v = v.astype(q.dtype)
+    qg = q.reshape(B, Sq, KV, groups, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None, None]
+        elif mask.ndim == 4:  # (B, 1|H, Sq, Sk) -> (B, KV, groups, Sq, Sk)
+            mask = mask.reshape(B, -1, 1, Sq, mask.shape[-1])
+        scores = scores + mask
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def chunked_sdpa(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, S, KV, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+) -> jax.Array:
+    """Query-block-chunked attention: XLA analogue of the flash kernel.
+
+    Never materializes the (S, S) score matrix — peak score memory is
+    (B, block_q, H, S).  Used for long sequences (prefill_32k, train_4k);
+    exact same math as :func:`sdpa` (tests assert allclose).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    assert S % block_q == 0, (S, block_q)
+    nb = S // block_q
+    qb = q.reshape(B, nb, block_q, KV, G, hd)
+    qb = jnp.moveaxis(qb, 1, 0)  # (nb, B, blk, KV, G, hd)
+    kpos = jnp.arange(S)
+    scale = jnp.sqrt(jnp.float32(hd))
+
+    def body(_, inp):
+        qi, i = inp  # (B, blk, KV, G, hd), scalar block index
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qi, k).astype(jnp.float32)
+        scores = scores / scale
+        if causal:
+            qpos = i * block_q + jnp.arange(block_q)
+            ok = kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                ok &= kpos[None, :] > qpos[:, None] - window
+            scores = scores + jnp.where(ok, 0.0, NEG_INF)[None, None, None]
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qb, jnp.arange(nb)))
+    outs = jnp.moveaxis(outs, 0, 1)  # (B, nb, blk, KV, G, hd)
+    return outs.reshape(B, S, H, hd)
+
+
+# sequences at least this long use the chunked path
+CHUNKED_THRESHOLD = 2048
+
+
+def causal_mask(Sq: int, Sk: int, window: int = 0) -> jax.Array:
+    """Additive (Sq, Sk) mask. Assumes queries are the last Sq of Sk keys."""
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    ok = kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (prefill / training)
+# ---------------------------------------------------------------------------
+def attention(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    causal: bool = True,
+    positions: Optional[jax.Array] = None,
+    use_rope: bool = True,
+    window: int = 0,
+    use_kernel: bool = False,
+) -> jax.Array:
+    B, S, _ = x.shape
+    q, k, v = qkv_project(p, cfg, x)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(
+            q, k, v, causal=causal, window=window
+        )
+    elif causal and S >= CHUNKED_THRESHOLD and S % 512 == 0:
+        out = chunked_sdpa(q, k, v, causal=True, window=window)
+    else:
+        mask = causal_mask(S, S, window) if causal else None
+        out = sdpa(q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_attention(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    kv_src: jax.Array,
+) -> jax.Array:
+    """x attends to kv_src (e.g. decoder->encoder, text->image tokens)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    out = sdpa(q, k, v, None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_attention_cached(
+    p: Params,
+    x: jax.Array,  # (B, 1, d)
+    ck: jax.Array,  # (B, Senc, KV, hd) precomputed
+    cv: jax.Array,
+) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    out = sdpa(q, ck, cv, None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def precompute_cross_kv(p: Params, kv_src: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache (ring buffer when windowed)
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, W, KV, hd)
+    v: jax.Array  # (B, W, KV, hd)
+    positions: jax.Array  # (B, W) absolute position per slot, -1 = empty
+
+
+def init_kv_cache(B: int, W: int, KV: int, hd: int, dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((B, W, KV, hd), dtype),
+        v=jnp.zeros((B, W, KV, hd), dtype),
+        positions=jnp.full((B, W), -1, jnp.int32),
+    )
+
+
+def decode_attention(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, 1, d)
+    cache: KVCache,
+    pos: jax.Array,  # scalar int32 — current absolute position
+    *,
+    window: int = 0,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, KVCache]:
+    B = x.shape[0]
+    q, k, v = qkv_project(p, cfg, x)  # (B, 1, H/KV, hd)
+    posb = jnp.broadcast_to(pos, (B, 1))
+    if use_rope:
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k = apply_rope(k, posb, cfg.rope_theta)
+    W = cache.k.shape[1]
+    # ring-buffer slot; when un-windowed W == max_seq so pos % W == pos
+    slot = pos % W
+    newk = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+    newv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+    newpos = jax.lax.dynamic_update_slice(
+        cache.positions, jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32), (0, slot)
+    )
+    # additive mask from slot validity
+    valid = (newpos >= 0) & (newpos <= pos)
+    if window > 0:
+        valid &= newpos > pos - window
+    mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]  # (B,1,1,W)
+    out = sdpa(q, newk, newv, mask)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, KVCache(newk, newv, newpos)

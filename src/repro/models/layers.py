@@ -1,0 +1,119 @@
+"""Shared neural-net building blocks (pure JAX, dict-pytree params)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    angles = angles[..., None, :]  # (..., seq, 1, half) broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, (d_model, d_ff), dtype),
+        "up": dense_init(k2, (d_model, d_ff), dtype),
+        "down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embedding(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {"tokens": embed_init(k1, (cfg.padded_vocab, cfg.d_model), dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, (cfg.d_model, cfg.padded_vocab), dtype)
+    return p
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return p["tokens"][tokens]
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    if "unembed" in p:
+        return x @ p["unembed"]
+    return x @ p["tokens"].T
+
+
+# ---------------------------------------------------------------------------
+# log-softmax helpers used by RL losses
+# ---------------------------------------------------------------------------
+def token_logprobs(logits: jax.Array, tokens: jax.Array,
+                   vocab_size: int = 0) -> jax.Array:
+    """Log-probability of each target token; logits (..., V), tokens (...).
+
+    vocab_size > 0 masks the padded-vocab region (embedding tables are
+    padded for sharding) so generation-time and recompute-time logprobs
+    agree exactly.
+    """
+    logits = logits.astype(jnp.float32)
+    if vocab_size:
+        V = logits.shape[-1]
+        logits = jnp.where(jnp.arange(V) < vocab_size, logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, tokens[..., None], axis=-1)[..., 0]
+    return picked - logz

@@ -1,0 +1,543 @@
+"""Unified model assembly for all six architecture kinds.
+
+Layer stacks are *scan-stacked*: per-layer params carry a leading layer
+axis and the forward pass is a ``lax.scan`` over it, keeping HLO size and
+compile time independent of depth (critical for the 88–100 layer archs in
+the 512-device dry-run).  Non-uniform stacks (hybrid, vlm) scan the
+uniform majority and nest the periodic minority inside the scan body.
+
+Public entry points (all pure functions):
+  init_model(key, cfg, dtype)                          -> params
+  forward(params, cfg, tokens, extra=None)             -> (logits, aux)
+  prefill(params, cfg, tokens, cache, extra=None)      -> (logits, cache)
+  init_decode_state(cfg, batch, cache_len, dtype)      -> cache
+  decode_step(params, cfg, token, cache, pos, extra)   -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DENSE, ENCDEC, HYBRID, MOE, SSM, VLM, ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import KVCache
+from repro.models.layers import (
+    Params,
+    embed,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+    unembed,
+)
+
+Extra = Optional[Dict[str, jax.Array]]
+
+
+# ===========================================================================
+# Per-layer-type init
+# ===========================================================================
+def _init_attn_layer(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    d_ff = cfg.d_ff if cfg.d_ff else 4 * cfg.d_model
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, d_ff, dtype),
+    }
+
+
+def _init_moe_layer(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "moe": moe_mod.init_moe(k2, cfg, dtype),
+    }
+
+
+def _init_ssm_layer(key, cfg: ModelConfig, dtype) -> Params:
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "mixer": ssm_mod.init_mamba2(key, cfg, dtype),
+    }
+
+
+def _init_cross_layer(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "xattn": attn.init_attention(k1, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff if cfg.d_ff else 4 * cfg.d_model, dtype),
+        "gate": jnp.zeros((1,), dtype),  # llama3.2-style tanh gate
+    }
+
+
+def _init_encdec_dec_layer(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "lnx": init_rmsnorm(cfg.d_model, dtype),
+        "xattn": attn.init_attention(k2, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _stack_init(init_fn, key, n: int, cfg: ModelConfig, dtype) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(k, cfg, dtype))(keys)
+
+
+# ===========================================================================
+# Model init
+# ===========================================================================
+def init_model(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    cfg.validate()
+    ke, kl, kx, kf = jax.random.split(key, 4)
+    p: Params = {"embed": init_embedding(ke, cfg, dtype),
+                 "ln_f": init_rmsnorm(cfg.d_model, dtype)}
+    if cfg.kind == DENSE:
+        p["layers"] = _stack_init(_init_attn_layer, kl, cfg.num_layers, cfg, dtype)
+    elif cfg.kind == MOE:
+        p["layers"] = _stack_init(_init_moe_layer, kl, cfg.num_layers, cfg, dtype)
+    elif cfg.kind == SSM:
+        p["layers"] = _stack_init(_init_ssm_layer, kl, cfg.num_layers, cfg, dtype)
+    elif cfg.kind == HYBRID:
+        n_groups, per = _hybrid_groups(cfg)
+        flat = _stack_init(_init_ssm_layer, kl, n_groups * per, cfg, dtype)
+        p["layers"] = jax.tree_util.tree_map(
+            lambda x: x.reshape((n_groups, per) + x.shape[1:]), flat
+        )
+        p["shared_attn"] = _init_attn_layer(kx, cfg, dtype)
+    elif cfg.kind == VLM:
+        n_groups, per = _vlm_groups(cfg)
+        flat = _stack_init(_init_attn_layer, kl, n_groups * per, cfg, dtype)
+        p["layers"] = jax.tree_util.tree_map(
+            lambda x: x.reshape((n_groups, per) + x.shape[1:]), flat
+        )
+        p["cross_layers"] = _stack_init(_init_cross_layer, kx, n_groups, cfg, dtype)
+    elif cfg.kind == ENCDEC:
+        p["enc_layers"] = _stack_init(
+            _init_attn_layer, kx, cfg.num_encoder_layers, cfg, dtype
+        )
+        p["ln_enc"] = init_rmsnorm(cfg.d_model, dtype)
+        p["layers"] = _stack_init(_init_encdec_dec_layer, kl, cfg.num_layers, cfg, dtype)
+    else:
+        raise ValueError(cfg.kind)
+    return p
+
+
+def _hybrid_groups(cfg: ModelConfig) -> Tuple[int, int]:
+    per = cfg.attn_every
+    assert cfg.num_layers % per == 0, (cfg.num_layers, per)
+    return cfg.num_layers // per, per
+
+
+def _vlm_groups(cfg: ModelConfig) -> Tuple[int, int]:
+    """num_layers counts self+cross; each group = (per self) + 1 cross."""
+    n_cross = cfg.num_layers // cfg.cross_attn_every
+    n_self = cfg.num_layers - n_cross
+    assert n_self % n_cross == 0, (n_self, n_cross)
+    return n_cross, n_self // n_cross
+
+
+# ===========================================================================
+# Layer bodies (full-sequence)
+# ===========================================================================
+def _attn_layer_fwd(lp: Params, cfg: ModelConfig, x, *, causal=True,
+                    window=0, use_kernel=False):
+    h = attn.attention(
+        lp["attn"], cfg, rmsnorm(lp["ln1"], x, cfg.norm_eps),
+        causal=causal, window=window, use_kernel=use_kernel,
+    )
+    x = x + h
+    x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+    return x
+
+
+def _moe_layer_fwd(lp: Params, cfg: ModelConfig, x, *, window=0, use_kernel=False):
+    h = attn.attention(
+        lp["attn"], cfg, rmsnorm(lp["ln1"], x, cfg.norm_eps),
+        causal=True, window=window, use_kernel=use_kernel,
+    )
+    x = x + h
+    y, aux = moe_mod.moe_block(lp["moe"], cfg, rmsnorm(lp["ln2"], x, cfg.norm_eps))
+    return x + y, aux
+
+
+def _ssm_layer_fwd(lp: Params, cfg: ModelConfig, x, *, use_kernel=False):
+    return x + ssm_mod.mamba2_block(
+        lp["mixer"], cfg, rmsnorm(lp["ln1"], x, cfg.norm_eps), use_kernel=use_kernel
+    )
+
+
+def _cross_layer_fwd(lp: Params, cfg: ModelConfig, x, kv_src):
+    g = jnp.tanh(lp["gate"].astype(jnp.float32)).astype(x.dtype)
+    h = attn.cross_attention(lp["xattn"], cfg, rmsnorm(lp["ln1"], x, cfg.norm_eps), kv_src)
+    x = x + g * h
+    x = x + g * mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+    return x
+
+
+# ===========================================================================
+# Forward (training / inference logprobs) — full sequence
+# ===========================================================================
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S) int32
+    extra: Extra = None,
+    *,
+    use_kernel: bool = False,
+    remat: bool = False,
+    act_spec=None,
+    return_hidden: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S, padded_vocab), aux_loss scalar).
+
+    remat=True checkpoints each scanned layer (activations recomputed in
+    the backward pass) — required to fit the deep archs on 16 GB chips.
+    act_spec: optional PartitionSpec for the (B, S, d) residual stream —
+    Megatron-style sequence-parallel activation sharding between layers.
+    """
+    from repro.utils.sharding import shard_hint
+
+    def ckpt(fn):
+        return jax.checkpoint(fn) if remat else fn
+
+    def hint(h):
+        return shard_hint(h, act_spec) if act_spec is not None else h
+
+    x = hint(embed(params["embed"], tokens))
+    aux = jnp.zeros((), jnp.float32)
+    w = cfg.sliding_window
+
+    if cfg.kind == DENSE:
+        def body(carry, lp):
+            return hint(_attn_layer_fwd(lp, cfg, carry, window=w,
+                                        use_kernel=use_kernel)), None
+        x, _ = jax.lax.scan(ckpt(body), x, params["layers"])
+
+    elif cfg.kind == MOE:
+        def body(carry, lp):
+            x, aux = carry
+            x, a = _moe_layer_fwd(lp, cfg, x, window=w, use_kernel=use_kernel)
+            return (hint(x), aux + a), None
+        (x, aux), _ = jax.lax.scan(ckpt(body), (x, aux), params["layers"])
+
+    elif cfg.kind == SSM:
+        def body(carry, lp):
+            return hint(_ssm_layer_fwd(lp, cfg, carry, use_kernel=use_kernel)), None
+        x, _ = jax.lax.scan(ckpt(body), x, params["layers"])
+
+    elif cfg.kind == HYBRID:
+        shared = params["shared_attn"]
+
+        def group(carry, group_params):
+            def inner(c, lp):
+                return _ssm_layer_fwd(lp, cfg, c, use_kernel=use_kernel), None
+            c, _ = jax.lax.scan(inner, carry, group_params)
+            c = _attn_layer_fwd(shared, cfg, c, window=w or 4096,
+                                use_kernel=use_kernel)
+            return hint(c), None
+        x, _ = jax.lax.scan(ckpt(group), x, params["layers"])
+
+    elif cfg.kind == VLM:
+        assert extra is not None and "image_embeds" in extra, "VLM needs image_embeds"
+        img = extra["image_embeds"].astype(x.dtype)
+
+        def group(carry, gp):
+            self_params, cross_params = gp
+            def inner(c, lp):
+                return _attn_layer_fwd(lp, cfg, c, window=w, use_kernel=use_kernel), None
+            c, _ = jax.lax.scan(inner, carry, self_params)
+            c = _cross_layer_fwd(cross_params, cfg, c, img)
+            return hint(c), None
+        x, _ = jax.lax.scan(ckpt(group), x, (params["layers"], params["cross_layers"]))
+
+    elif cfg.kind == ENCDEC:
+        assert extra is not None and "frame_embeds" in extra, "encdec needs frame_embeds"
+        enc = encode(params, cfg, extra["frame_embeds"].astype(x.dtype),
+                     use_kernel=use_kernel, remat=remat)
+
+        def body(carry, lp):
+            c = carry
+            c = c + attn.attention(
+                lp["attn"], cfg, rmsnorm(lp["ln1"], c, cfg.norm_eps),
+                causal=True, window=w, use_kernel=use_kernel)
+            c = c + attn.cross_attention(
+                lp["xattn"], cfg, rmsnorm(lp["lnx"], c, cfg.norm_eps), enc)
+            c = c + mlp(lp["mlp"], rmsnorm(lp["ln2"], c, cfg.norm_eps))
+            return hint(c), None
+        x, _ = jax.lax.scan(ckpt(body), x, params["layers"])
+
+    else:
+        raise ValueError(cfg.kind)
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if return_hidden:
+        return unembed(params["embed"], x), aux, x
+    return unembed(params["embed"], x), aux
+
+
+def encode(params: Params, cfg: ModelConfig, frame_embeds: jax.Array,
+           *, use_kernel: bool = False, remat: bool = False) -> jax.Array:
+    """Whisper-style encoder over precomputed (stub-frontend) frames."""
+    def body(carry, lp):
+        return _attn_layer_fwd(lp, cfg, carry, causal=False, use_kernel=use_kernel), None
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, frame_embeds, params["enc_layers"])
+    return rmsnorm(params["ln_enc"], x, cfg.norm_eps)
+
+
+# ===========================================================================
+# Decode state
+# ===========================================================================
+class DecodeState(NamedTuple):
+    """Union cache across arch kinds; unused members are () placeholders."""
+    kv: Any = ()          # stacked KVCache for self-attn layers
+    ssm: Any = ()         # stacked SSMState
+    cross_kv: Any = ()    # precomputed (k, v) for cross-attn layers
+    shared_kv: Any = ()   # hybrid: per-application KVCache for the shared block
+
+
+def _stack_kv(cfg: ModelConfig, shape0, B, W, dtype) -> KVCache:
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    def z(s):
+        return jnp.zeros(shape0 + s, dtype)
+    return KVCache(
+        k=z((B, W, KV, hd)),
+        v=z((B, W, KV, hd)),
+        positions=jnp.full(shape0 + (B, W), -1, jnp.int32),
+    )
+
+
+def _stack_ssm_state(cfg: ModelConfig, shape0, B, dtype) -> ssm_mod.SSMState:
+    s = cfg.ssm
+    nh, p, n = cfg.num_ssm_heads, s.head_dim, s.state_size
+    conv_ch = cfg.d_inner + 2 * n
+    return ssm_mod.SSMState(
+        ssm=jnp.zeros(shape0 + (B, nh, p, n), jnp.float32),
+        conv=jnp.zeros(shape0 + (B, s.conv_width - 1, conv_ch), dtype),
+    )
+
+
+def init_decode_state(cfg: ModelConfig, B: int, cache_len: int,
+                      dtype=jnp.float32) -> DecodeState:
+    """cache_len: KV window (= min(seq, sliding_window) when windowed)."""
+    w = cfg.sliding_window
+    W = min(cache_len, w) if w else cache_len
+    if cfg.kind in (DENSE, MOE):
+        return DecodeState(kv=_stack_kv(cfg, (cfg.num_layers,), B, W, dtype))
+    if cfg.kind == SSM:
+        return DecodeState(ssm=_stack_ssm_state(cfg, (cfg.num_layers,), B, dtype))
+    if cfg.kind == HYBRID:
+        n_groups, per = _hybrid_groups(cfg)
+        Wh = min(cache_len, w or 4096)
+        return DecodeState(
+            ssm=_stack_ssm_state(cfg, (n_groups, per), B, dtype),
+            shared_kv=_stack_kv(cfg, (n_groups,), B, Wh, dtype),
+        )
+    if cfg.kind == VLM:
+        n_groups, per = _vlm_groups(cfg)
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        cross = (
+            jnp.zeros((n_groups, B, cfg.num_image_tokens, KV, hd), dtype),
+            jnp.zeros((n_groups, B, cfg.num_image_tokens, KV, hd), dtype),
+        )
+        return DecodeState(kv=_stack_kv(cfg, (n_groups, per), B, W, dtype),
+                           cross_kv=cross)
+    if cfg.kind == ENCDEC:
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        L = cfg.num_layers
+        cross = (
+            jnp.zeros((L, B, cfg.encoder_seq_len, KV, hd), dtype),
+            jnp.zeros((L, B, cfg.encoder_seq_len, KV, hd), dtype),
+        )
+        return DecodeState(kv=_stack_kv(cfg, (L,), B, W, dtype), cross_kv=cross)
+    raise ValueError(cfg.kind)
+
+
+def precompute_cross_caches(params: Params, cfg: ModelConfig,
+                            extra: Dict[str, jax.Array],
+                            state: DecodeState) -> DecodeState:
+    """Fill cross-attn K/V from image/frame embeddings (prefill-time)."""
+    if cfg.kind == VLM:
+        img = extra["image_embeds"]
+        def per_layer(lp):
+            return attn.precompute_cross_kv(lp["xattn"], img)
+        ks, vs = jax.vmap(per_layer)(params["cross_layers"])
+        return state._replace(cross_kv=(ks, vs))
+    if cfg.kind == ENCDEC:
+        enc = extra.get("encoder_out")
+        if enc is None:
+            enc = encode(params, cfg, extra["frame_embeds"])
+        def per_layer(lp):
+            return attn.precompute_cross_kv(lp["xattn"], enc)
+        ks, vs = jax.vmap(per_layer)(params["layers"])
+        return state._replace(cross_kv=(ks, vs))
+    return state
+
+
+# ===========================================================================
+# Decode step (one token)
+# ===========================================================================
+def _attn_decode_layer(lp, cfg, x, cache: KVCache, pos, window):
+    h, cache = attn.decode_attention(
+        lp["attn"], cfg, rmsnorm(lp["ln1"], x, cfg.norm_eps), cache, pos,
+        window=window)
+    x = x + h
+    x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+    return x, cache
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    token: jax.Array,  # (B, 1) int32
+    state: DecodeState,
+    pos: jax.Array,  # scalar int32
+    extra: Extra = None,
+    *,
+    unroll: int = 1,
+) -> Tuple[jax.Array, DecodeState]:
+    """unroll>1 unrolls the layer scan — XLA can then update each layer's
+    KV-cache slice in place instead of copying the cache through the
+    loop's double-buffered carry (sweeps GiBs off decode temp memory at
+    production cache sizes; see EXPERIMENTS.md §Perf)."""
+    x = embed(params["embed"], token)  # (B, 1, d)
+    w = cfg.sliding_window
+
+    if cfg.kind == DENSE:
+        def body(carry, xs):
+            lp, cache = xs
+            x, c = _attn_decode_layer(lp, cfg, carry, cache, pos, w)
+            return x, c
+        x, kv = jax.lax.scan(body, x, (params["layers"], state.kv),
+                             unroll=unroll)
+        state = state._replace(kv=kv)
+
+    elif cfg.kind == MOE:
+        def body(carry, xs):
+            lp, cache = xs
+            x = carry
+            h, cache = attn.decode_attention(
+                lp["attn"], cfg, rmsnorm(lp["ln1"], x, cfg.norm_eps), cache, pos,
+                window=w)
+            x = x + h
+            y, _ = moe_mod.moe_block(lp["moe"], cfg,
+                                     rmsnorm(lp["ln2"], x, cfg.norm_eps))
+            return x + y, cache
+        x, kv = jax.lax.scan(body, x, (params["layers"], state.kv),
+                             unroll=unroll)
+        state = state._replace(kv=kv)
+
+    elif cfg.kind == SSM:
+        def body(carry, xs):
+            lp, st = xs
+            y, st = ssm_mod.mamba2_decode(
+                lp["mixer"], cfg, rmsnorm(lp["ln1"], carry, cfg.norm_eps), st)
+            return carry + y, st
+        x, states = jax.lax.scan(body, x, (params["layers"], state.ssm))
+        state = state._replace(ssm=states)
+
+    elif cfg.kind == HYBRID:
+        shared = params["shared_attn"]
+        wh = w or 4096
+
+        def group(carry, xs):
+            gp, sts, kvc = xs
+            def inner(c, ys):
+                lp, st = ys
+                y, st = ssm_mod.mamba2_decode(
+                    lp["mixer"], cfg, rmsnorm(lp["ln1"], c, cfg.norm_eps), st)
+                return c + y, st
+            c, sts = jax.lax.scan(inner, carry, (gp, sts))
+            c, kvc = _attn_decode_layer(shared, cfg, c, kvc, pos, wh)
+            return c, (sts, kvc)
+        x, (ssm_states, shared_kv) = jax.lax.scan(
+            group, x, (params["layers"], state.ssm, state.shared_kv))
+        state = state._replace(ssm=ssm_states, shared_kv=shared_kv)
+
+    elif cfg.kind == VLM:
+        def group(carry, xs):
+            sp, cp, kvc, (ck, cv) = xs
+            def inner(c, ys):
+                lp, cache = ys
+                return _attn_decode_layer(lp, cfg, c, cache, pos, w)
+            c, kvc = jax.lax.scan(inner, carry, (sp, kvc))
+            g = jnp.tanh(cp["gate"].astype(jnp.float32)).astype(c.dtype)
+            h = attn.cross_attention_cached(
+                cp["xattn"], rmsnorm(cp["ln1"], c, cfg.norm_eps), ck, cv)
+            c = c + g * h
+            c = c + g * mlp(cp["mlp"], rmsnorm(cp["ln2"], c, cfg.norm_eps))
+            return c, (kvc, (ck, cv))
+        x, (kv, cross) = jax.lax.scan(
+            group, x,
+            (params["layers"], params["cross_layers"], state.kv, state.cross_kv))
+        state = state._replace(kv=kv, cross_kv=cross)
+
+    elif cfg.kind == ENCDEC:
+        def body(carry, xs):
+            lp, cache, (ck, cv) = xs
+            c = carry
+            h, cache = attn.decode_attention(
+                lp["attn"], cfg, rmsnorm(lp["ln1"], c, cfg.norm_eps), cache, pos,
+                window=w)
+            c = c + h
+            c = c + attn.cross_attention_cached(
+                lp["xattn"], rmsnorm(lp["lnx"], c, cfg.norm_eps), ck, cv)
+            c = c + mlp(lp["mlp"], rmsnorm(lp["ln2"], c, cfg.norm_eps))
+            return c, (cache, (ck, cv))
+        x, (kv, cross) = jax.lax.scan(
+            body, x, (params["layers"], state.kv, state.cross_kv))
+        state = state._replace(kv=kv, cross_kv=cross)
+
+    else:
+        raise ValueError(cfg.kind)
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)  # (B, 1, V)
+    return logits, state
+
+
+# ===========================================================================
+# Prefill: forward + build decode cache (used by the rollout engine)
+# ===========================================================================
+def prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S)
+    state: DecodeState,
+    extra: Extra = None,
+) -> Tuple[jax.Array, DecodeState]:
+    """Sequentially decode the prompt into the cache.
+
+    A production engine would use a fused prefill; for the CPU-scale
+    engine a ``lax.scan`` over positions is adequate and reuses the
+    (well-tested) decode path.  Returns logits at the last position.
+    """
+    if extra is not None:
+        state = precompute_cross_caches(params, cfg, extra, state)
+    B, S = tokens.shape
+
+    def step(carry, t):
+        st, pos = carry
+        logits, st = decode_step(params, cfg, t[:, None], st, pos, extra=None)
+        return (st, pos + 1), logits[:, 0]
+
+    (state, _), logits_seq = jax.lax.scan(
+        step, (state, jnp.int32(0)), jnp.moveaxis(tokens, 1, 0)
+    )
+    return logits_seq[-1][:, None, :], state

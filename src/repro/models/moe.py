@@ -1,0 +1,155 @@
+"""Mixture-of-Experts with capacity-based dispatch (Switch/MaxText style).
+
+Dispatch is scatter-based rather than one-hot-einsum based so compiled
+FLOPs stay ~proportional to *active* parameters (top_k · capacity_factor),
+which the roofline "useful FLOPs" ratio checks.
+
+Expert-parallel sharding: the expert buffer (E, C, d) is annotated with a
+sharding hint — E over "model" when divisible (llama4: 16e/16 = 1 expert
+per group → all-to-all dispatch), otherwise C over "data".
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init, init_mlp, mlp
+from repro.utils.sharding import DATA, MODEL, POD, get_active_mesh, shard_hint
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    assert cfg.moe is not None
+    m = cfg.moe
+    k_router, k_gate, k_up, k_down, k_shared = jax.random.split(key, 5)
+    E, d, f = m.num_experts, cfg.d_model, m.expert_d_ff
+    p: Params = {
+        "router": dense_init(k_router, (d, E), jnp.float32),
+        "gate": dense_init(k_gate, (E, d, f), dtype),
+        "up": dense_init(k_up, (E, d, f), dtype),
+        "down": dense_init(k_down, (E, f, d), dtype),
+    }
+    if m.shared_expert_d_ff:
+        p["shared"] = init_mlp(k_shared, d, m.shared_expert_d_ff, dtype)
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(tokens * m.top_k / m.num_experts * m.capacity_factor)
+    # keep MXU-aligned when large (round UP so alignment never adds drops)
+    if c >= 128:
+        c = ((c + 127) // 128) * 128
+    return max(c, 1)
+
+
+def moe_block(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, d)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,d), aux load-balance loss scalar)."""
+    m = cfg.moe
+    # Expert-buffer sharding (measured in EXPERIMENTS.md §Perf A1/A4):
+    # capacity ("token") dim over the batch axes + d_model over "model".
+    # The classic expert-parallel layout (E over "model") is also
+    # supported (REPRO_MOE_EXPERT_PARALLEL=1) but measured 3x worse on
+    # peak memory at 32k prefill: the scatter from token-sharded inputs
+    # into an expert-sharded buffer lowers to all-to-alls whose XLA
+    # implementation materializes replicated intermediates.
+    import os as _os
+    mesh = get_active_mesh()
+    msize = mesh.shape.get(MODEL, 1) if mesh is not None else 1
+    if (_os.environ.get("REPRO_MOE_EXPERT_PARALLEL")
+            and m.num_experts % max(msize, 1) == 0):
+        buf_spec = P(MODEL, (POD, DATA), None)
+    else:
+        buf_spec = P(None, (POD, DATA), MODEL)
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.num_experts, m.top_k
+    C = _capacity(T, cfg)
+
+    xf = x.reshape(T, d)
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # ---- auxiliary load-balance loss (Switch eq. 4) ----
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux = m.aux_loss_weight * E * jnp.sum(me * ce)
+
+    # ---- capacity dispatch ----
+    flat_expert = expert_idx.reshape(T * k)  # row-major: token-major order
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # (Tk, E)
+    pos_in_expert = jnp.cumsum(onehot, axis=0) - onehot  # position before me
+    my_pos = jnp.sum(pos_in_expert * onehot, axis=-1)  # (Tk,)
+    keep = my_pos < C
+    slot = flat_expert * C + my_pos  # (Tk,) flat index into (E*C)
+    slot = jnp.where(keep, slot, E * C)  # overflow bucket (dropped)
+
+    token_ids = jnp.repeat(jnp.arange(T), k)  # (Tk,)
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    buf = buf.at[slot].add(xf[token_ids] * keep[:, None].astype(x.dtype))
+    buf = buf[: E * C].reshape(E, C, d)
+    buf = shard_hint(buf, buf_spec)
+
+    # ---- expert FFN (grouped matmul) ----
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["up"]
+    )
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["down"])
+    out_buf = shard_hint(out_buf, buf_spec)
+
+    # ---- combine ----
+    out_flat = out_buf.reshape(E * C, d)
+    gathered = jnp.where(
+        keep[:, None], out_flat[jnp.clip(slot, 0, E * C - 1)], 0.0
+    )  # (Tk, d)
+    weighted = gathered * gate_vals.reshape(T * k, 1).astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[token_ids].add(weighted)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], xf)
+    return y.reshape(B, S, d), aux
+
+
+def moe_block_dense_ref(p: Params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Oracle: dense all-experts compute, exact top-k combine (no capacity drops).
+
+    Used by tests to validate the dispatch path (with capacity_factor high
+    enough that nothing drops, outputs must match).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)
+    gate_vals = gate_vals / jnp.clip(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    # all experts for all tokens
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xf, p["gate"])) * jnp.einsum(
+        "td,edf->tef", xf, p["up"]
+    )
+    all_out = jnp.einsum("tef,efd->ted", h, p["down"])  # (T, E, d)
+    combine = jnp.zeros(probs.shape, jnp.float32)
+    combine = jax.vmap(lambda c, idx, g: c.at[idx].set(g))(combine, expert_idx, gate_vals)
+    y = jnp.einsum("te,ted->td", combine.astype(x.dtype), all_out)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, m.num_experts, dtype=jnp.float32), axis=1),
+        axis=0,
+    )
+    aux = m.aux_loss_weight * m.num_experts * jnp.sum(me * ce)
+    if "shared" in p:
+        y = y + mlp(p["shared"], xf)
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,263 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train/prefill + decode.
+
+Follows the minimal SSD formulation of arXiv:2405.21060 (single B/C group):
+
+    h_i = exp(dt_i * A) h_{i-1} + dt_i * (B_i ⊗ x_i)
+    y_i = C_i · h_i + D * x_i
+
+Chunked algorithm: intra-chunk quadratic (attention-like) term + inter-chunk
+state recurrence (lax.scan over chunks).  The perf-critical chunk kernel has
+a Pallas TPU implementation in ``repro.kernels.ssd_scan``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init, init_rmsnorm, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def init_mamba2(key, cfg: ModelConfig, dtype) -> Params:
+    s = cfg.ssm
+    assert s is not None
+    d, di, n = cfg.d_model, cfg.d_inner, s.state_size
+    nh = cfg.num_ssm_heads
+    conv_ch = di + 2 * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # in_proj -> [z(di), x(di), B(n), C(n), dt(nh)]
+        "in_proj": dense_init(k1, (d, 2 * di + 2 * n + nh), dtype),
+        "conv_w": dense_init(k2, (s.conv_width, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ),  # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": init_rmsnorm(di, dtype),
+        "out_proj": dense_init(k3, (di, d), dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    di, n, nh = cfg.d_inner, cfg.ssm.state_size, cfg.num_ssm_heads
+    z = proj[..., :di]
+    xs = proj[..., di : 2 * di]
+    B = proj[..., 2 * di : 2 * di + n]
+    C = proj[..., 2 * di + n : 2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n :]
+    return z, xs, B, C, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x (B, L, ch), w (width, ch)."""
+    width = w.shape[0]
+    xpad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xpad,
+        w[:, None, :],  # (width, 1, ch) IO feature grouping
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD (training / prefill)
+# ---------------------------------------------------------------------------
+def ssd_chunked(
+    x: jax.Array,  # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H) — post-softplus
+    A: jax.Array,  # (H,) negative
+    Bm: jax.Array,  # (B, L, N)
+    Cm: jax.Array,  # (B, L, N)
+    D: jax.Array,  # (H,)
+    chunk: int,
+    init_state: jax.Array = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    xc = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = Bm.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    a = dtc * A  # (b, nc, s, h) log-decay
+    a_cum = jnp.cumsum(a, axis=2)
+
+    # intra-chunk (quadratic) term.  Mask BEFORE exp (with a large negative
+    # value) so the masked upper triangle neither overflows in the forward
+    # pass nor poisons the backward pass with inf·0 = NaN cotangents.
+    diff = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]  # (b,nc,i,j,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    L = jnp.exp(jnp.where(tri, diff, -1e30))
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    y_diag = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp", CB, L, dtc, xc)
+
+    # end-of-chunk states from within-chunk inputs
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (b,nc,s,h)
+    states = jnp.einsum("bcsh,bcsh,bcsn,bcshp->bchpn", decay_to_end, dtc, Bc, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (b, nc, h)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def scan_fn(s_prev, inp):
+        dec, st = inp  # (b,h), (b,h,p,n)
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev  # emit state at chunk START
+
+    (final_state, prev_states) = jax.lax.scan(
+        scan_fn,
+        init_state.astype(jnp.float32),
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b, nc, h, p, n)
+
+    # contribution of the chunk-start state to each position
+    state_decay = jnp.exp(a_cum)  # (b,nc,s,h)
+    y_off = jnp.einsum("bcsn,bchpn,bcsh->bcshp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y, final_state
+
+
+# ---------------------------------------------------------------------------
+# Block state for decode
+# ---------------------------------------------------------------------------
+class SSMState(NamedTuple):
+    ssm: jax.Array  # (B, H, P, N) f32
+    conv: jax.Array  # (B, width-1, conv_ch)
+
+
+def init_ssm_state(cfg: ModelConfig, B: int, dtype) -> SSMState:
+    s = cfg.ssm
+    nh, p, n = cfg.num_ssm_heads, s.head_dim, s.state_size
+    conv_ch = cfg.d_inner + 2 * n
+    return SSMState(
+        ssm=jnp.zeros((B, nh, p, n), jnp.float32),
+        conv=jnp.zeros((B, s.conv_width - 1, conv_ch), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Full block: train/prefill forward
+# ---------------------------------------------------------------------------
+def mamba2_block(
+    p: Params, cfg: ModelConfig, x: jax.Array, *, use_kernel: bool = False
+) -> jax.Array:
+    """x: (B, L, d_model) -> (B, L, d_model)."""
+    s = cfg.ssm
+    B_, L, _ = x.shape
+    di, n, nh = cfg.d_inner, s.state_size, cfg.num_ssm_heads
+    proj = x @ p["in_proj"]
+    z, xs, Bm, Cm, dt = _split_proj(cfg, proj)
+    xBC = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = xBC[..., :di], xBC[..., di : di + n], xBC[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B_, L, nh, s.head_dim)
+    # pad sequence to a chunk multiple
+    chunk = min(s.chunk_size, L) if L % s.chunk_size else s.chunk_size
+    pad = (-L) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        y = kops.ssd_scan(xh, dt, A, Bm, Cm, p["D"], chunk)
+    else:
+        y, _ = ssd_chunked(xh, dt, A, Bm, Cm, p["D"], chunk)
+    y = y[:, :L].reshape(B_, L, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+def mamba2_decode(
+    p: Params, cfg: ModelConfig, x: jax.Array, state: SSMState
+) -> Tuple[jax.Array, SSMState]:
+    """x: (B, 1, d_model); O(1) state update."""
+    s = cfg.ssm
+    B_ = x.shape[0]
+    di, n, nh = cfg.d_inner, s.state_size, cfg.num_ssm_heads
+    proj = x[:, 0] @ p["in_proj"]  # (B, ...)
+    z, xs, Bm, Cm, dt = _split_proj(cfg, proj)
+    xBC = jnp.concatenate([xs, Bm, Cm], axis=-1)  # (B, conv_ch)
+    # conv over [conv_state, xBC]
+    window = jnp.concatenate([state.conv, xBC[:, None, :]], axis=1)  # (B, w, ch)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    xs, Bm, Cm = (
+        conv_out[:, :di],
+        conv_out[:, di : di + n],
+        conv_out[:, di + n :],
+    )
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B_, nh, s.head_dim).astype(jnp.float32)
+    decay = jnp.exp(dt * A)  # (B, nh)
+    upd = (dt[:, :, None, None] * xh[:, :, :, None]) * Bm.astype(jnp.float32)[
+        :, None, None, :
+    ]
+    new_ssm = state.ssm * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, Cm.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B_, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, SSMState(ssm=new_ssm, conv=window[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# Sequential oracle (for tests)
+# ---------------------------------------------------------------------------
+def ssd_sequential_ref(x, dt, A, Bm, Cm, D):
+    """Step-by-step recurrence; slow but obviously correct."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    x, dt, Bm, Cm = (t.astype(jnp.float32) for t in (x, dt, Bm, Cm))
+
+    def step(hstate, inp):
+        xi, dti, Bi, Ci = inp
+        decay = jnp.exp(dti * A)  # (b,h)
+        upd = dti[:, :, None, None] * xi[:, :, :, None] * Bi[:, None, None, :]
+        hstate = hstate * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", hstate, Ci)
+        return hstate, y
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step,
+        init,
+        (
+            jnp.moveaxis(x, 1, 0),
+            jnp.moveaxis(dt, 1, 0),
+            jnp.moveaxis(Bm, 1, 0),
+            jnp.moveaxis(Cm, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1)
+    return y + x * D[None, None, :, None]

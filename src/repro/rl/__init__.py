@@ -1,0 +1,22 @@
+from repro.rl.advantage import (  # noqa: F401
+    gae_advantages,
+    grpo_advantages,
+    reinforce_pp_advantages,
+    whiten,
+)
+from repro.rl.env import EnvConfig, VecReachEnv  # noqa: F401
+from repro.rl.grpo_workflow import GRPOConfig, GRPORunner  # noqa: F401
+from repro.rl.reward import math_reward  # noqa: F401
+from repro.rl.workers import (  # noqa: F401
+    ActorWorker,
+    InferenceWorker,
+    RewardWorker,
+    RolloutWorker,
+    SimulatorWorker,
+)
+from repro.rl.rlhf_workflow import (  # noqa: F401
+    CriticWorker,
+    PPOConfig,
+    ReferenceWorker,
+    RLHFRunner,
+)

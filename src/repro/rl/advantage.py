@@ -1,0 +1,72 @@
+"""Advantage estimators: GRPO group normalization, GAE, REINFORCE++.
+
+All operate on numpy arrays host-side (they sit between workers in the
+workflow, not inside the jitted steps).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def grpo_advantages(rewards: np.ndarray, group_size: int,
+                    eps: float = 1e-6) -> np.ndarray:
+    """Group-relative advantages (GRPO): responses to the same query form a
+    group; advantage = (r - mean_group) / std_group, broadcast per token by
+    the caller.  rewards: (B,) with B = n_queries * group_size, grouped
+    consecutively."""
+    B = rewards.shape[0]
+    assert B % group_size == 0, (B, group_size)
+    g = rewards.reshape(B // group_size, group_size)
+    mean = g.mean(axis=1, keepdims=True)
+    std = g.std(axis=1, keepdims=True)
+    adv = (g - mean) / (std + eps)
+    return adv.reshape(B)
+
+
+def reinforce_pp_advantages(rewards: np.ndarray,
+                            baseline_momentum: float = 0.9,
+                            state: Optional[float] = None
+                            ) -> Tuple[np.ndarray, float]:
+    """REINFORCE++ style: global moving-average baseline + batch whitening."""
+    b = rewards.mean() if state is None else (
+        baseline_momentum * state + (1 - baseline_momentum) * rewards.mean())
+    adv = rewards - b
+    std = adv.std() + 1e-6
+    return adv / std, float(b)
+
+
+def gae_advantages(rewards: np.ndarray, values: np.ndarray,
+                   dones: np.ndarray, gamma: float = 0.99,
+                   lam: float = 0.95) -> Tuple[np.ndarray, np.ndarray]:
+    """Generalized advantage estimation over (T, B) step-major rollouts.
+
+    values: (T+1, B) — bootstrap value appended.
+    Returns (advantages (T, B), returns (T, B))."""
+    T, B = rewards.shape
+    adv = np.zeros((T, B), np.float32)
+    last = np.zeros((B,), np.float32)
+    for t in reversed(range(T)):
+        notdone = 1.0 - dones[t]
+        delta = rewards[t] + gamma * values[t + 1] * notdone - values[t]
+        last = delta + gamma * lam * notdone * last
+        adv[t] = last
+    returns = adv + values[:-1]
+    return adv, returns
+
+
+def broadcast_to_tokens(adv_seq: np.ndarray, loss_mask: np.ndarray
+                        ) -> np.ndarray:
+    """Per-sequence advantage -> per-token (B, S) masked broadcast."""
+    return adv_seq[:, None].astype(np.float32) * loss_mask.astype(np.float32)
+
+
+def whiten(x: np.ndarray, mask: Optional[np.ndarray] = None,
+           eps: float = 1e-6) -> np.ndarray:
+    if mask is None:
+        return (x - x.mean()) / (x.std() + eps)
+    m = mask.astype(bool)
+    mu, sd = x[m].mean(), x[m].std()
+    out = np.where(m, (x - mu) / (sd + eps), 0.0)
+    return out.astype(np.float32)

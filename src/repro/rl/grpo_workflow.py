@@ -1,0 +1,250 @@
+"""End-to-end GRPO workflow runner on the M2Flow runtime (Fig. 5b).
+
+The *logical* workflow is the plain imperative loop of the paper:
+
+    for batch in data:
+        update_rollout_weights()
+        rollout.generate(data_ch -> rollout_ch)
+        inference.compute_logprobs(rollout_ch -> scored_ch)
+        reward.score(...)
+        actor.train(scored_ch).wait()
+
+M2Flow then decides where/when each worker actually runs: the runner
+first executes one *profiling iteration* (tracing the channel data flow
+to extract the workflow graph, timing each worker at two granularities),
+asks the Scheduler for a plan (or a forced collocated/disaggregated
+mode), and runs the remaining iterations through the Execution Flow
+Manager under that plan — no change to the workflow code.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import (
+    Channel,
+    Cluster,
+    Controller,
+    FlowGraph,
+    Profiler,
+    SchedulerConfig,
+)
+from repro.core.profiler import CostModel, measure_onoffload
+from repro.rl.workers import (
+    ActorWorker,
+    InferenceWorker,
+    RewardWorker,
+    RolloutWorker,
+)
+from repro.train.data import PromptDataset
+from repro.train.trainer import TrainHParams
+
+WORKFLOW_ORDER = ("rollout", "inference", "reward", "actor")
+
+
+@dataclass
+class GRPOConfig:
+    batch_size: int = 32
+    group_size: int = 4
+    prompt_len: int = 8
+    max_new_tokens: int = 8
+    temperature: float = 1.0
+    iterations: int = 10
+    mode: str = "auto"  # auto | collocated | disaggregated
+    seed: int = 0
+    profile_batches: tuple = (8, 32)
+    # AReaL-style one-step off-policy asynchrony (paper §4): iteration i
+    # rolls out with the weights of iteration i-1 while i-1's training
+    # update runs concurrently; the PPO clip absorbs the staleness.
+    async_offpolicy: bool = False
+
+
+@dataclass
+class IterationStats:
+    iteration: int
+    wall_time: float
+    mean_reward: float
+    accuracy: float
+    metrics: Dict[str, float] = field(default_factory=dict)
+
+
+class GRPORunner:
+    """Owns the workers + data and runs the M2Flow-scheduled loop."""
+
+    def __init__(self, cfg: ModelConfig, rl: GRPOConfig,
+                 hp: Optional[TrainHParams] = None,
+                 cluster: Optional[Cluster] = None):
+        self.model_cfg = cfg
+        self.rl = rl
+        self.cluster = cluster or Cluster(num_nodes=1, devices_per_node=8)
+        hp = hp or TrainHParams()
+        n_queries = rl.batch_size // rl.group_size
+        self.data = PromptDataset(n_queries, prompt_len=rl.prompt_len,
+                                  seed=rl.seed)
+
+        self.actor = ActorWorker("actor/0", cfg=cfg, hp=hp, seed=rl.seed,
+                                 devices=self.cluster.allocate("actor", 4))
+        self.rollout = RolloutWorker(
+            "rollout/0", cfg=cfg, max_new_tokens=rl.max_new_tokens,
+            temperature=rl.temperature, seed=rl.seed,
+            devices=self.cluster.allocate("rollout", 4))
+        self.inference = InferenceWorker(
+            "inference/0", cfg=cfg,
+            devices=self.cluster.allocate("inference", 2))
+        self.reward = RewardWorker(
+            "reward/0", prompt_len=rl.prompt_len, group_size=rl.group_size)
+
+        self.workers = {"rollout": self.rollout, "inference": self.inference,
+                        "reward": self.reward, "actor": self.actor}
+        self.task_fns = {
+            "rollout": lambda w, c: w.generate(c),
+            "inference": lambda w, c: w.compute_logprobs(c),
+            "reward": lambda w, c: w.score(c),
+            "actor": lambda w, c: w.train(c),
+        }
+        self.controller = Controller(self.cluster)
+        self.stats: List[IterationStats] = []
+        self.plan = None
+
+    # ------------------------------------------------------------------
+    def _expand_groups(self, batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Each query is repeated group_size times (GRPO sampling)."""
+        g = self.rl.group_size
+        return {k: np.repeat(v, g, axis=0) for k, v in batch.items()}
+
+    def _sync_weights(self) -> None:
+        params = self.actor.params()
+        self.rollout.update_weights(params)
+        self.inference.update_weights(params)
+
+    # ------------------------------------------------------------------
+    # Phase 1: profiling iteration — trace graph + fit cost models
+    # ------------------------------------------------------------------
+    def profile(self) -> FlowGraph:
+        self._sync_weights()
+        prof = Profiler(warmup=1, repeats=1)
+        profiles: Dict[str, CostModel] = {}
+        base = self._expand_groups(self.data.next_batch())
+
+        chain = {}
+        chain["rollout"] = base
+        graph = FlowGraph()
+        prev = None
+        for name in WORKFLOW_ORDER:
+            graph.add_worker(name)
+            if prev is not None:
+                graph.add_edge(prev, name, channel=f"{prev}->{name}")
+            prev = name
+
+        for name in WORKFLOW_ORDER:
+            w, fn = self.workers[name], self.task_fns[name]
+            inp = chain[name]
+
+            def run_at(b, w=w, fn=fn, inp=inp):
+                sub = {k: v[:b] for k, v in inp.items()}
+                return fn(w, sub)
+
+            sizes = [b for b in self.rl.profile_batches
+                     if b <= self.rl.batch_size] or [self.rl.batch_size]
+            cm = prof.measure(name, run_at, sizes)
+            out = fn(w, inp)
+            nxt = WORKFLOW_ORDER[WORKFLOW_ORDER.index(name) + 1] \
+                if name != WORKFLOW_ORDER[-1] else None
+            if nxt:
+                chain[nxt] = out
+            if hasattr(w, "_state") and w.state_bytes():
+                on, off = measure_onoffload(w)
+                cm.onload_time, cm.offload_time = on, off
+            cm.base_mem = float(w.state_bytes())
+            profiles[name] = cm
+        self.controller.profiles = profiles
+        self.graph = graph
+        return graph
+
+    # ------------------------------------------------------------------
+    def plan_execution(self) -> None:
+        self.controller.scheduler_cfg = SchedulerConfig(
+            total_batch=self.rl.batch_size,
+            granularity_divisors=(1, 2, 4),
+            device_quantum=2,
+        )
+        self.plan = self.controller.plan(
+            self.graph, total_batch=self.rl.batch_size, mode=self.rl.mode)
+
+    # ------------------------------------------------------------------
+    def run_iteration(self, it: int) -> IterationStats:
+        t0 = time.perf_counter()
+        if self.rl.async_offpolicy:
+            out = self._run_iteration_async()
+        else:
+            self._sync_weights()
+            batch = self._expand_groups(self.data.next_batch())
+            out = self.controller.execute(
+                self.plan, self.workers, self.task_fns, batch)
+        wall = time.perf_counter() - t0
+        rewards = out.get("rewards", np.zeros(1))
+        acc = float((rewards > 0).mean())
+        st = IterationStats(
+            iteration=it, wall_time=wall,
+            mean_reward=float(rewards.mean()), accuracy=acc,
+            metrics=self.actor.metrics_history[-1]
+            if self.actor.metrics_history else {})
+        self.stats.append(st)
+        return st
+
+    def _run_iteration_async(self):
+        """One-step off-policy iteration: rollout(i) with stale weights
+        overlaps train(i-1) running in a background thread."""
+        import threading
+
+        batch = self._expand_groups(self.data.next_batch())
+        # rollout -> inference -> reward with the CURRENT (stale) weights
+        chunk = self.task_fns["rollout"](self.rollout, batch)
+        chunk = self.task_fns["inference"](self.inference, chunk)
+        chunk = self.task_fns["reward"](self.reward, chunk)
+        # wait for the previous update, then kick off this one
+        prev = getattr(self, "_train_thread", None)
+        if prev is not None:
+            prev.join()
+        result = {}
+
+        def train():
+            result.update(self.task_fns["actor"](self.actor, chunk))
+
+        th = threading.Thread(target=train, daemon=True)
+        th.start()
+        self._train_thread = th
+        # sync the NOW-stale-by-one weights for the next rollout
+        self._sync_weights()
+        return chunk
+
+    def finish_async(self) -> None:
+        th = getattr(self, "_train_thread", None)
+        if th is not None:
+            th.join()
+            self._train_thread = None
+
+    def run(self, verbose: bool = True) -> List[IterationStats]:
+        self.profile()
+        self.plan_execution()
+        if verbose:
+            print(self.plan.pretty())
+        for it in range(self.rl.iterations):
+            st = self.run_iteration(it)
+            if verbose:
+                print(f"iter {it:3d}  wall={st.wall_time:6.2f}s "
+                      f"reward={st.mean_reward:+6.2f} acc={st.accuracy:5.2f} "
+                      f"loss={st.metrics.get('loss', float('nan')):+.4f}")
+        self.finish_async()
+        return self.stats
+
+    def throughput(self) -> float:
+        """tokens/sec over the measured iterations (paper metric)."""
+        if not self.stats:
+            return 0.0
+        tok = self.rl.batch_size * (self.rl.prompt_len + self.rl.max_new_tokens)
+        return tok * len(self.stats) / sum(s.wall_time for s in self.stats)

@@ -1,0 +1,297 @@
+"""Full PPO/RLHF workflow (paper Fig. 1 top-right): four models in the loop.
+
+  actor      — trainable policy (clipped PPO with per-token values)
+  critic     — trainable value model (separate backbone + value head)
+  reference  — frozen copy of the initial actor (KL anchor)
+  reward     — scalar scorer (rule-based here, per §5.1; a learned RM
+               plugs into the same worker slot)
+
+plus the rollout and inference workers shared with GRPO.  The workflow
+graph has 6 nodes with a diamond (rollout feeds reference/critic/reward
+in parallel, all meeting at the actor update) — the richest scheduling
+graph in the repo, and the reason RLHF is the paper's motivating example
+for flexible orchestration.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import Cluster, Controller, FlowGraph, SchedulerConfig
+from repro.core.worker import Worker
+from repro.models import forward, init_model
+from repro.models.layers import dense_init, token_logprobs
+from repro.rl.advantage import gae_advantages, whiten
+from repro.rl.reward import math_reward
+from repro.rl.workers import InferenceWorker, RolloutWorker
+from repro.train.data import PromptDataset
+from repro.train.optimizer import (
+    AdamWConfig,
+    adamw_update,
+    init_adamw,
+)
+from repro.train.trainer import TrainHParams, policy_loss
+
+
+# ---------------------------------------------------------------------------
+# Critic: backbone + value head
+# ---------------------------------------------------------------------------
+def init_critic(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "backbone": init_model(k1, cfg),
+        "vhead": dense_init(k2, (cfg.d_model, 1), jnp.float32),
+    }
+
+
+def critic_values(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    """Per-token value estimates (B, S)."""
+    _, _, hidden = forward(params["backbone"], cfg, tokens,
+                           return_hidden=True)
+    v = hidden.astype(jnp.float32) @ params["vhead"]
+    return v[..., 0]
+
+
+class CriticWorker(Worker):
+    def __init__(self, name: str, *, cfg: ModelConfig, lr: float = 1e-3,
+                 seed: int = 1, devices=(), process_index: int = 0):
+        super().__init__(name, devices=devices, process_index=process_index)
+        self.cfg = cfg
+        params = init_critic(jax.random.PRNGKey(seed), cfg)
+        self.register_state("params", params)
+        self.register_state("opt", init_adamw(params))
+        self.opt_cfg = AdamWConfig(lr=lr, clip_norm=1.0)
+        self._values = jax.jit(
+            lambda p, t: critic_values(p, cfg, t))
+
+        def vloss(p, tokens, returns, mask):
+            v = critic_values(p, cfg, tokens)
+            err = jnp.square(v - returns) * mask
+            return jnp.sum(err) / jnp.maximum(jnp.sum(mask), 1.0)
+
+        self._grad = jax.jit(jax.value_and_grad(vloss))
+
+    def values(self, chunk: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        out = dict(chunk)
+        out["values"] = np.asarray(
+            self._values(self.get_state("params"),
+                         jnp.asarray(chunk["tokens"])))
+        return out
+
+    def train_value(self, chunk: Dict[str, np.ndarray]) -> Dict[str, Any]:
+        params, opt = self.get_state("params"), self.get_state("opt")
+        loss, grads = self._grad(
+            params, jnp.asarray(chunk["tokens"]),
+            jnp.asarray(chunk["returns"]), jnp.asarray(chunk["loss_mask"]))
+        params, opt, _ = adamw_update(self.opt_cfg, params, grads, opt)
+        self.set_state("params", params)
+        self.set_state("opt", opt)
+        out = dict(chunk)
+        out["value_loss"] = float(loss)
+        return out
+
+
+class ReferenceWorker(Worker):
+    """Frozen initial policy — supplies ref logprobs for the KL penalty."""
+
+    def __init__(self, name: str, *, cfg: ModelConfig, params,
+                 devices=(), process_index: int = 0):
+        super().__init__(name, devices=devices, process_index=process_index)
+        self.cfg = cfg
+        self.register_state("params", jax.tree_util.tree_map(
+            jnp.copy, params))
+
+        def lp(p, tokens):
+            logits, _ = forward(p, cfg, tokens)
+            out = token_logprobs(logits[:, :-1], tokens[:, 1:],
+                                 cfg.vocab_size)
+            return jnp.pad(out, ((0, 0), (1, 0)))
+
+        self._lp = jax.jit(lp)
+
+    def ref_logprobs(self, chunk: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        out = dict(chunk)
+        out["ref_logprobs"] = np.asarray(
+            self._lp(self.get_state("params"), jnp.asarray(chunk["tokens"])))
+        return out
+
+
+class PPOActorWorker(Worker):
+    """Trainable actor with the clipped PPO loss + KL-to-reference."""
+
+    def __init__(self, name: str, *, cfg: ModelConfig, hp: TrainHParams,
+                 seed: int = 0, devices=(), process_index: int = 0):
+        super().__init__(name, devices=devices, process_index=process_index)
+        self.cfg = cfg
+        self.hp = hp
+        params = init_model(jax.random.PRNGKey(seed), cfg)
+        self.register_state("params", params)
+        self.register_state("opt", init_adamw(params))
+
+        def step(params, opt, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: policy_loss(cfg, hp, p, batch), has_aux=True
+            )(params)
+            params, opt, om = adamw_update(hp.optimizer, params, grads, opt)
+            metrics.update(om)
+            return params, opt, metrics
+
+        self._step = jax.jit(step)
+        self.metrics_history: List[Dict[str, float]] = []
+
+    def params(self):
+        return self.get_state("params")
+
+    def train(self, chunk: Dict[str, np.ndarray]) -> Dict[str, Any]:
+        batch = {k: jnp.asarray(chunk[k]) for k in
+                 ("tokens", "old_logprobs", "advantages", "loss_mask",
+                  "ref_logprobs") if k in chunk}
+        params, opt, metrics = self._step(
+            self.get_state("params"), self.get_state("opt"), batch)
+        self.set_state("params", params)
+        self.set_state("opt", opt)
+        m = {k: float(v) for k, v in metrics.items()}
+        self.metrics_history.append(m)
+        out = dict(chunk)
+        out["metrics"] = m
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+@dataclass
+class PPOConfig:
+    batch_size: int = 32
+    prompt_len: int = 8
+    max_new_tokens: int = 4
+    temperature: float = 1.0
+    iterations: int = 20
+    kl_coef: float = 0.02
+    gamma: float = 1.0
+    lam: float = 0.95
+    mode: str = "auto"
+    seed: int = 0
+
+
+@dataclass
+class PPOIterStats:
+    iteration: int
+    wall_time: float
+    mean_reward: float
+    accuracy: float
+    value_loss: float
+    metrics: Dict[str, float] = field(default_factory=dict)
+
+
+class RLHFRunner:
+    """actor+critic+reference+reward PPO over the M2Flow runtime."""
+
+    def __init__(self, cfg: ModelConfig, ppo: PPOConfig,
+                 hp: Optional[TrainHParams] = None):
+        self.cfg = cfg
+        self.ppo = ppo
+        self.cluster = Cluster(num_nodes=1, devices_per_node=8)
+        hp = hp or TrainHParams(optimizer=AdamWConfig(lr=1e-3, clip_norm=1.0),
+                                kl_coef=ppo.kl_coef, entropy_coef=0.02)
+        self.data = PromptDataset(ppo.batch_size, prompt_len=ppo.prompt_len,
+                                  seed=ppo.seed, add_only=True)
+        self.data.max_operand = 3
+
+        self.actor = PPOActorWorker(
+            "actor/0", cfg=cfg, hp=hp, seed=ppo.seed,
+            devices=self.cluster.allocate("actor", 2))
+        self.rollout = RolloutWorker(
+            "rollout/0", cfg=cfg, max_new_tokens=ppo.max_new_tokens,
+            temperature=ppo.temperature, seed=ppo.seed,
+            devices=self.cluster.allocate("rollout", 2))
+        self.inference = InferenceWorker(
+            "inference/0", cfg=cfg,
+            devices=self.cluster.allocate("inference", 1))
+        self.reference = ReferenceWorker(
+            "reference/0", cfg=cfg, params=self.actor.params(),
+            devices=self.cluster.allocate("reference", 1))
+        self.critic = CriticWorker(
+            "critic/0", cfg=cfg, seed=ppo.seed + 1,
+            devices=self.cluster.allocate("critic", 2))
+        self.stats: List[PPOIterStats] = []
+
+    # the 6-node RLHF workflow graph (for the scheduler/benchmarks)
+    def graph(self) -> FlowGraph:
+        g = FlowGraph()
+        for w in ("rollout", "inference", "reference", "critic_v", "reward",
+                  "actor"):
+            g.add_worker(w)
+        g.add_edge("rollout", "inference")
+        g.add_edge("rollout", "reference")
+        g.add_edge("rollout", "critic_v")
+        g.add_edge("rollout", "reward")
+        g.add_edge("inference", "actor")
+        g.add_edge("reference", "actor")
+        g.add_edge("critic_v", "actor")
+        g.add_edge("reward", "actor")
+        return g
+
+    def _sync(self):
+        p = self.actor.params()
+        self.rollout.update_weights(p)
+        self.inference.update_weights(p)
+
+    def run_iteration(self, it: int) -> PPOIterStats:
+        t0 = time.perf_counter()
+        self._sync()
+        ppo = self.ppo
+        batch = self.data.next_batch()
+        # rollout
+        chunk = self.rollout.generate(dict(batch))
+        # fan-out: inference / reference / critic values / reward
+        chunk = self.inference.compute_logprobs(chunk)
+        chunk = self.reference.ref_logprobs(chunk)
+        chunk = self.critic.values(chunk)
+        toks = chunk["tokens"]
+        B, S = toks.shape
+        rewards = math_reward(toks, batch["answers"], ppo.prompt_len)
+        mask = np.zeros((B, S), np.float32)
+        mask[:, ppo.prompt_len:] = toks[:, ppo.prompt_len:] != 0
+
+        # --- per-token GAE: reward lands on the last valid token ---
+        values = chunk["values"] * mask  # (B, S)
+        last_idx = np.maximum(mask.cumsum(1).argmax(1), ppo.prompt_len)
+        r_tok = np.zeros((B, S), np.float32)
+        r_tok[np.arange(B), last_idx] = rewards
+        # treat the response as a short episode over time axis S
+        adv, ret = gae_advantages(
+            r_tok.T, np.concatenate([values.T, np.zeros((1, B), np.float32)]),
+            np.zeros((S, B), np.float32), gamma=ppo.gamma, lam=ppo.lam)
+        adv = whiten(adv.T, mask)
+        chunk["advantages"] = adv * mask
+        chunk["returns"] = ret.T * mask
+        chunk["loss_mask"] = mask
+
+        # --- updates ---
+        chunk = self.actor.train(chunk)
+        chunk = self.critic.train_value(chunk)
+        st = PPOIterStats(
+            iteration=it, wall_time=time.perf_counter() - t0,
+            mean_reward=float(rewards.mean()),
+            accuracy=float((rewards > 0).mean()),
+            value_loss=chunk["value_loss"],
+            metrics=chunk.get("metrics", {}))
+        self.stats.append(st)
+        return st
+
+    def run(self, verbose: bool = True) -> List[PPOIterStats]:
+        for it in range(self.ppo.iterations):
+            st = self.run_iteration(it)
+            if verbose and (it % 5 == 0 or it == self.ppo.iterations - 1):
+                print(f"ppo iter {it:3d} wall={st.wall_time:5.2f}s "
+                      f"reward={st.mean_reward:+6.2f} acc={st.accuracy:4.2f} "
+                      f"vloss={st.value_loss:7.3f} "
+                      f"kl={st.metrics.get('kl_ref', 0.0):+.4f}")
+        return self.stats

@@ -1,0 +1,178 @@
+"""RL component workers (paper Fig. 5a) built on the M2Flow Worker base.
+
+Each worker owns its JAX state (registered for onload/offload context
+switching) and exposes chunk-level task methods the Execution Flow
+Manager drives at any granularity — the SPMD-over-any-batch property
+elastic pipelining relies on (§3.3).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.worker import Worker
+from repro.models import init_model
+from repro.rl.advantage import broadcast_to_tokens, grpo_advantages
+from repro.rl.env import EnvConfig, VecReachEnv
+from repro.rl.reward import math_reward
+from repro.serve.engine import Engine
+from repro.train.optimizer import init_adamw
+from repro.train.trainer import (
+    TrainHParams,
+    make_prefill_step,
+    make_train_step,
+)
+
+
+class RolloutWorker(Worker):
+    """Generation engine (the paper's SGLang/vLLM role)."""
+
+    def __init__(self, name: str, *, cfg: ModelConfig,
+                 max_new_tokens: int = 16, temperature: float = 1.0,
+                 seed: int = 0, devices: Sequence[int] = (),
+                 process_index: int = 0):
+        super().__init__(name, devices=devices, process_index=process_index)
+        self.cfg = cfg
+        self.engine = Engine(cfg, max_new_tokens=max_new_tokens,
+                             temperature=temperature)
+        self.key = jax.random.PRNGKey(seed + process_index)
+        self.register_state("params", None)
+
+    # weight sync barrier (paper §2.1): trainer -> rollout
+    def update_weights(self, params: Any) -> None:
+        self.set_state("params", params)
+
+    def generate(self, chunk: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        params = self.get_state("params")
+        assert params is not None, "rollout weights not initialized"
+        self.key, sub = jax.random.split(self.key)
+        prompts = jnp.asarray(chunk["prompt_tokens"])
+        res = self.engine.generate(params, prompts, key=sub)
+        out = dict(chunk)
+        out["tokens"] = np.asarray(res.tokens)
+        out["logprobs"] = np.asarray(res.logprobs)
+        out["lengths"] = np.asarray(res.lengths)
+        return out
+
+
+class InferenceWorker(Worker):
+    """Prefill-only logprob recompute (the paper's 'Inference' box)."""
+
+    def __init__(self, name: str, *, cfg: ModelConfig,
+                 devices: Sequence[int] = (), process_index: int = 0):
+        super().__init__(name, devices=devices, process_index=process_index)
+        self.cfg = cfg
+        self._step = jax.jit(make_prefill_step(cfg))
+        self.register_state("params", None)
+
+    def update_weights(self, params: Any) -> None:
+        self.set_state("params", params)
+
+    def compute_logprobs(self, chunk: Dict[str, np.ndarray]
+                         ) -> Dict[str, np.ndarray]:
+        params = self.get_state("params")
+        out = dict(chunk)
+        out["old_logprobs"] = np.asarray(
+            self._step(params, {"tokens": jnp.asarray(chunk["tokens"])}))
+        return out
+
+
+class ActorWorker(Worker):
+    """Trainable policy (actor) with AdamW state; GRPO/PPO loss."""
+
+    def __init__(self, name: str, *, cfg: ModelConfig, hp: TrainHParams,
+                 seed: int = 0, devices: Sequence[int] = (),
+                 process_index: int = 0):
+        super().__init__(name, devices=devices, process_index=process_index)
+        self.cfg = cfg
+        self.hp = hp
+        params = init_model(jax.random.PRNGKey(seed), cfg)
+        self.register_state("params", params)
+        self.register_state("opt", init_adamw(params))
+        self._step = jax.jit(make_train_step(cfg, hp))
+        self.metrics_history = []
+
+    def params(self) -> Any:
+        return self.get_state("params")
+
+    def train(self, chunk: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        params = self.get_state("params")
+        opt = self.get_state("opt")
+        batch = {
+            "tokens": jnp.asarray(chunk["tokens"]),
+            "old_logprobs": jnp.asarray(chunk["old_logprobs"]),
+            "advantages": jnp.asarray(chunk["advantages"]),
+            "loss_mask": jnp.asarray(chunk["loss_mask"]),
+        }
+        params, opt, metrics = self._step(params, opt, batch)
+        self.set_state("params", params)
+        self.set_state("opt", opt)
+        m = {k: float(v) for k, v in metrics.items()}
+        self.metrics_history.append(m)
+        out = dict(chunk)
+        out["metrics"] = m
+        return out
+
+
+class RewardWorker(Worker):
+    """Rule-based reward + GRPO group advantage computation."""
+
+    def __init__(self, name: str, *, prompt_len: int, group_size: int = 1,
+                 devices: Sequence[int] = (), process_index: int = 0):
+        super().__init__(name, devices=devices, process_index=process_index)
+        self.prompt_len = prompt_len
+        self.group_size = group_size
+
+    def score(self, chunk: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        toks = chunk["tokens"]
+        rewards = math_reward(toks, chunk["answers"], self.prompt_len)
+        B, S = toks.shape
+        mask = np.zeros((B, S), np.float32)
+        mask[:, self.prompt_len:] = (toks[:, self.prompt_len:] != 0)
+        gs = min(self.group_size, B) if B % max(self.group_size, 1) == 0 else 1
+        adv_seq = grpo_advantages(rewards, gs)
+        out = dict(chunk)
+        out["rewards"] = rewards
+        out["loss_mask"] = mask
+        out["advantages"] = broadcast_to_tokens(adv_seq, mask)
+        return out
+
+
+class SimulatorWorker(Worker):
+    """Embodied simulator (CPU-bound, instance-replicated — Fig. 3)."""
+
+    def __init__(self, name: str, *, env_cfg: EnvConfig, seed: int = 0,
+                 devices: Sequence[int] = (), process_index: int = 0):
+        super().__init__(name, devices=devices, process_index=process_index)
+        self.env = VecReachEnv(env_cfg, seed=seed + process_index)
+        self.env_cfg = env_cfg
+
+    def rollout_steps(self, chunk: Dict[str, Any]) -> Dict[str, Any]:
+        """Step the sim with the provided per-step action callback results.
+
+        chunk: {"actions": (T, num_envs) int} -> trajectories.
+        """
+        actions = chunk["actions"]
+        T = actions.shape[0]
+        obs_list, rew_list, done_list = [self.env.observe()], [], []
+        succ = 0
+        for t in range(T):
+            obs, rew, done, info = self.env.step(actions[t])
+            obs_list.append(obs)
+            rew_list.append(rew)
+            done_list.append(done)
+            succ += int(info["success"].sum())
+        out = dict(chunk)
+        out["obs"] = np.stack(obs_list)  # (T+1, N, obs_dim)
+        out["rewards"] = np.stack(rew_list)
+        out["dones"] = np.stack(done_list)
+        out["successes"] = succ
+        return out
+
+    def observe(self, _chunk: Optional[Dict] = None) -> Dict[str, Any]:
+        return {"obs": self.env.observe()}

@@ -1,0 +1,103 @@
+"""Rollout/serving engine: batched prefill + autoregressive decode.
+
+This is the "rollout worker" compute used by the M2Flow runtime (the
+paper's SGLang/vLLM role).  Generation runs under ``lax.scan`` with a
+per-sequence `done` mask, and returns per-token *behaviour logprobs* so
+the trainer can form importance ratios without a separate inference pass
+when the collocated mode is chosen (one-forward-pass trick, §5.3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.layers import token_logprobs
+
+
+class GenerationResult(NamedTuple):
+    tokens: jax.Array  # (B, S_total) prompt + generated (PAD after EOS)
+    logprobs: jax.Array  # (B, S_total) behaviour logprob per token (0 on prompt)
+    lengths: jax.Array  # (B,) total valid length
+    done: jax.Array  # (B,) bool — hit EOS before max tokens
+
+
+def _sample(key, logits: jax.Array, temperature: float, vocab_size: int):
+    """Categorical sample with padded-vocab masking; temp<=0 = greedy."""
+    logits = logits.astype(jnp.float32)
+    neg = jnp.full_like(logits, -1e30)
+    V = logits.shape[-1]
+    mask = jnp.arange(V) < vocab_size
+    logits = jnp.where(mask, logits, neg)
+    if temperature <= 0.0:
+        tok = jnp.argmax(logits, axis=-1)
+    else:
+        tok = jax.random.categorical(key, logits / temperature, axis=-1)
+    lp = token_logprobs(logits, tok)
+    return tok.astype(jnp.int32), lp
+
+
+class Engine:
+    """Owns jitted prefill/decode functions for one model config."""
+
+    def __init__(self, cfg: ModelConfig, *, max_new_tokens: int = 32,
+                 temperature: float = 1.0, eos_token: int = 2,
+                 pad_token: int = 0):
+        self.cfg = cfg
+        self.max_new_tokens = max_new_tokens
+        self.temperature = temperature
+        self.eos = eos_token
+        self.pad = pad_token
+        self._generate = jax.jit(self._generate_impl, static_argnames=("B", "S"))
+
+    # ------------------------------------------------------------------
+    def _generate_impl(self, params, prompt_tokens, prompt_lens, key, *,
+                       B: int, S: int):
+        cfg = self.cfg
+        total = S + self.max_new_tokens
+        state = M.init_decode_state(cfg, B, total)
+
+        # ---- prefill the (left-padded) prompt ----
+        logits, state = M.prefill(params, cfg, prompt_tokens, state)
+        last = logits[:, 0]  # (B, V)
+
+        out_tokens = jnp.concatenate(
+            [prompt_tokens,
+             jnp.full((B, self.max_new_tokens), self.pad, jnp.int32)], axis=1)
+        out_lp = jnp.zeros((B, total), jnp.float32)
+
+        def step(carry, i):
+            state, last, toks, lps, done, key = carry
+            key, sub = jax.random.split(key)
+            tok, lp = _sample(sub, last, self.temperature, cfg.vocab_size)
+            tok = jnp.where(done, self.pad, tok)
+            lp = jnp.where(done, 0.0, lp)
+            pos = S + i
+            toks = jax.lax.dynamic_update_slice(toks, tok[:, None], (0, pos))
+            lps = jax.lax.dynamic_update_slice(lps, lp[:, None], (0, pos))
+            newdone = done | (tok == self.eos)
+            logits, state = M.decode_step(params, cfg, tok[:, None], state, pos)
+            return (state, logits[:, 0], toks, lps, newdone, key), None
+
+        done0 = jnp.zeros((B,), bool)
+        (state, last, out_tokens, out_lp, done, _), _ = jax.lax.scan(
+            step, (state, last, out_tokens, out_lp, done0, key),
+            jnp.arange(self.max_new_tokens))
+        lengths = S + jnp.sum(
+            (out_tokens[:, S:] != self.pad).astype(jnp.int32), axis=1)
+        return GenerationResult(out_tokens, out_lp, lengths, done)
+
+    # ------------------------------------------------------------------
+    def generate(self, params, prompt_tokens, prompt_lens=None,
+                 key=None) -> GenerationResult:
+        """prompt_tokens: (B, S) int32 left-padded prompts."""
+        B, S = prompt_tokens.shape
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        if prompt_lens is None:
+            prompt_lens = jnp.full((B,), S, jnp.int32)
+        return self._generate(params, prompt_tokens, prompt_lens, key, B=B, S=S)

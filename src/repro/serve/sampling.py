@@ -1,0 +1,24 @@
+"""Sampling utilities shared by the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def top_k_logits(logits: jax.Array, k: int) -> jax.Array:
+    if k <= 0:
+        return logits
+    vals, _ = jax.lax.top_k(logits, k)
+    cutoff = vals[..., -1:]
+    return jnp.where(logits < cutoff, -1e30, logits)
+
+
+def top_p_logits(logits: jax.Array, p: float) -> jax.Array:
+    if p >= 1.0:
+        return logits
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    cut_idx = jnp.sum(cum < p, axis=-1, keepdims=True)
+    cutoff = jnp.take_along_axis(sorted_logits, cut_idx, axis=-1)
+    return jnp.where(logits < cutoff, -1e30, logits)

@@ -1,0 +1,15 @@
+from repro.train.optimizer import (  # noqa: F401
+    AdamWConfig,
+    AdamWState,
+    adamw_update,
+    init_adamw,
+)
+from repro.train.trainer import (  # noqa: F401
+    TrainHParams,
+    init_train_state,
+    lm_loss,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    policy_loss,
+)

@@ -1,0 +1,60 @@
+"""Checkpointing: pytree <-> directory of .npz + msgpack metadata.
+
+No orbax dependency; works for params + optimizer state + arbitrary
+metadata.  Layout:
+    <dir>/manifest.msgpack   {step, treedef_repr, keys}
+    <dir>/arrays.npz         flat arrays keyed by path
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+from repro.utils.treeutil import tree_paths
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = tree_paths(tree)
+    return {k: np.asarray(v) for k, v in flat.items()}
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            return {k: rec(f"{prefix}/{k}", v) for k, v in node.items()}
+        if hasattr(node, "_fields"):
+            return type(node)(**{
+                f: rec(f"{prefix}/{f}", getattr(node, f)) for f in node._fields
+            })
+        if isinstance(node, (list, tuple)):
+            t = type(node)
+            return t(rec(f"{prefix}/{i}", v) for i, v in enumerate(node))
+        arr = flat[prefix]
+        return jax.numpy.asarray(arr)
+
+    return rec("", template)
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0,
+                    metadata: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **{k.replace("/", "|"): v
+                                                  for k, v in flat.items()})
+    manifest = {"step": step, "keys": list(flat.keys()),
+                "metadata": metadata or {}}
+    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+
+
+def load_checkpoint(path: str, template: Any) -> Tuple[Any, int, Dict]:
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k.replace("|", "/"): z[k] for k in z.files}
+    tree = _unflatten_into(template, flat)
+    return tree, manifest["step"], manifest.get("metadata", {})

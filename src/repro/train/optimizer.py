@@ -1,0 +1,131 @@
+"""Optimizers from scratch (no optax): AdamW + global-norm clip + schedules.
+
+The optimizer state is a plain pytree mirroring the params, so it inherits
+whatever sharding the params carry (FSDP-style 2D sharding ⇒ the moments
+are automatically ZeRO-sharded).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.treeutil import global_norm
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # scalar int32
+    mu: Params
+    nu: Params
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    warmup_steps: int = 0
+    total_steps: int = 0  # 0 = constant lr after warmup
+    min_lr_frac: float = 0.1
+
+
+def init_adamw(params: Params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def schedule_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.warmup_steps > 0:
+        warm = jnp.minimum(1.0, (step + 1.0) / cfg.warmup_steps)
+    else:
+        warm = 1.0
+    if cfg.total_steps > 0:
+        frac = jnp.clip(
+            (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        decay = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    else:
+        decay = 1.0
+    return lr * warm * decay
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Tuple[Params, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def _is_matrix(p) -> bool:
+    return p.ndim >= 2
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params: Params,
+    grads: Params,
+    state: AdamWState,
+) -> Tuple[Params, AdamWState, Dict[str, jax.Array]]:
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = schedule_lr(cfg, state.step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay > 0 and _is_matrix(p):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    newp = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    newm = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    newv = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return newp, AdamWState(step=step, mu=newm, nu=newv), metrics
+
+
+# ---------------------------------------------------------------------------
+# SGD (used by tests as a simple reference and for the critic warm start)
+# ---------------------------------------------------------------------------
+class SGDState(NamedTuple):
+    step: jax.Array
+
+
+def init_sgd(params: Params) -> SGDState:
+    return SGDState(step=jnp.zeros((), jnp.int32))
+
+
+def sgd_update(lr: float, params: Params, grads: Params,
+               state: SGDState) -> Tuple[Params, SGDState, Dict[str, jax.Array]]:
+    newp = jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return newp, SGDState(step=state.step + 1), {"grad_norm": global_norm(grads)}

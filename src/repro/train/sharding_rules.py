@@ -1,0 +1,171 @@
+"""Parameter/batch sharding rules for the production meshes.
+
+Baseline scheme (see DESIGN.md §5 and EXPERIMENTS.md §Perf for iterations):
+  * TP  ("model" axis): attention heads / d_ff / expert dim / vocab
+  * FSDP ("data" axis): d_model-sized dims of every weight — weights live
+    sharded 256-way and are all-gathered per layer inside the scan (XLA
+    GSPMD inserts the gathers), ZeRO-sharding the optimizer moments for
+    free since they mirror param sharding.
+  * batch over ("pod", "data") — pods are pure data-parallel replicas of
+    the weight sharding (HSDP), so weight all-gathers never cross the
+    pod axis; only the gradient all-reduce does.
+
+Every rule goes through ``spec_for`` which drops any axis that does not
+divide (24 heads on a 16-way axis ⇒ replicated heads, d_ff still sharded).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.utils.sharding import DATA, MODEL, batch_axes, maybe_axis, spec_for
+from repro.utils.treeutil import map_with_path
+
+# (suffix, base_rank, axes) — first match wins, most specific first.
+# base_rank is the unstacked rank; stacked leading layer dims get None.
+_RULES: Sequence[Tuple[str, int, Tuple]] = (
+    ("/embed/tokens", 2, (MODEL, DATA)),
+    ("/embed/unembed", 2, (DATA, MODEL)),
+    ("/attn/wq", 3, (DATA, MODEL, None)),
+    ("/attn/wk", 3, (DATA, MODEL, None)),
+    ("/attn/wv", 3, (DATA, MODEL, None)),
+    ("/attn/wo", 3, (MODEL, None, DATA)),
+    ("/xattn/wq", 3, (DATA, MODEL, None)),
+    ("/xattn/wk", 3, (DATA, MODEL, None)),
+    ("/xattn/wv", 3, (DATA, MODEL, None)),
+    ("/xattn/wo", 3, (MODEL, None, DATA)),
+    ("/mlp/gate", 2, (DATA, MODEL)),
+    ("/mlp/up", 2, (DATA, MODEL)),
+    ("/mlp/down", 2, (MODEL, DATA)),
+    ("/shared/gate", 2, (DATA, MODEL)),
+    ("/shared/up", 2, (DATA, MODEL)),
+    ("/shared/down", 2, (MODEL, DATA)),
+    ("/moe/router", 2, (DATA, None)),
+    ("/mixer/in_proj", 2, (DATA, MODEL)),
+    ("/mixer/out_proj", 2, (MODEL, DATA)),
+    ("/mixer/conv_w", 2, (None, MODEL)),
+    ("/mixer/conv_b", 1, (MODEL,)),
+)
+
+_MOE_EXPERT_RULES = {
+    # when num_experts % model_axis == 0 -> expert parallelism
+    "/moe/gate": ((MODEL, DATA, None), (None, DATA, MODEL)),
+    "/moe/up": ((MODEL, DATA, None), (None, DATA, MODEL)),
+    "/moe/down": ((MODEL, None, DATA), (None, MODEL, DATA)),
+}
+
+
+def _spec_for_leaf(mesh: Mesh, cfg: ModelConfig, path: str, leaf) -> P:
+    shape = tuple(leaf.shape)
+    rank = len(shape)
+    for suffix, base_rank, axes in _RULES:
+        if path.endswith(suffix):
+            pad = (None,) * (rank - base_rank)
+            return spec_for(mesh, shape, pad + tuple(axes))
+    for suffix, (ep_axes, tp_axes) in _MOE_EXPERT_RULES.items():
+        if path.endswith(suffix):
+            assert cfg.moe is not None
+            msize = mesh.shape.get(MODEL, 1)
+            axes = ep_axes if cfg.moe.num_experts % msize == 0 else tp_axes
+            pad = (None,) * (rank - 3)
+            return spec_for(mesh, shape, pad + tuple(axes))
+    # biases, norms, A_log, D, gates ... -> replicated
+    return P()
+
+
+def param_specs(mesh: Mesh, cfg: ModelConfig, params: Any) -> Any:
+    """PartitionSpec pytree mirroring ``params`` (arrays or SDS)."""
+    return map_with_path(lambda p, leaf: _spec_for_leaf(mesh, cfg, p, leaf), params)
+
+
+def param_shardings(mesh: Mesh, cfg: ModelConfig, params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(mesh, cfg, params),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+def batch_spec(mesh: Mesh, batch_size: int) -> P:
+    return P(maybe_axis(mesh, batch_size, batch_axes(mesh)))
+
+
+def array_batch_specs(mesh: Mesh, tree: Any) -> Any:
+    """Shard dim0 (batch) of every array in a batch pytree."""
+
+    def leaf(x):
+        b = x.shape[0] if x.ndim else 1
+        ax = maybe_axis(mesh, b, batch_axes(mesh))
+        return P(*((ax,) + (None,) * (x.ndim - 1)))
+
+    return jax.tree_util.tree_map(leaf, tree)
+
+
+def decode_state_specs(mesh: Mesh, cfg: ModelConfig, state: Any) -> Any:
+    """KV/SSM cache shardings: batch over ("pod","data"); "model" goes to
+    kv-heads when divisible, otherwise to the cache *sequence* dim (W) —
+    sequence-parallel decode attention (XLA reduces softmax/PV across the
+    model axis instead of replicating a multi-GB cache).
+
+    Cache layouts (see models.model):
+      kv.k/v        (L..., B, W, KV, hd)
+      kv.positions  (L..., B, W)
+      ssm.ssm       (L..., B, H, P, N)
+      ssm.conv      (L..., B, w-1, ch)
+      cross k/v     (L, B, S_src, KV, hd)
+    """
+    bax = batch_axes(mesh)
+    msize = mesh.shape.get(MODEL, 1)
+
+    def kv_axes(shape):
+        # (..., B, W, KV, hd): prefer heads on model, else W on model
+        lead = len(shape) - 4
+        B, W, KV, hd = shape[-4:]
+        if KV % msize == 0:
+            return (None,) * lead + (bax, None, MODEL, None), "heads"
+        if W % msize == 0:
+            return (None,) * lead + (bax, MODEL, None, None), "seq"
+        return (None,) * lead + (bax, None, None, None), "none"
+
+    # determine once (from the main kv cache if present) whether positions
+    # must be seq-sharded to match k/v
+    def leaf(path: str, x) -> P:
+        shape = tuple(x.shape)
+        rank = len(shape)
+        if path.endswith("/positions"):
+            # (..., B, W) — shard W on model iff k/v shard W
+            lead = rank - 2
+            B, W = shape[-2:]
+            kv_mode = "seq" if (cfg.num_kv_heads % msize != 0 and W % msize == 0)                 else "none"
+            ax_w = MODEL if kv_mode == "seq" else None
+            axes = (None,) * lead + (bax, ax_w)
+            return spec_for(mesh, shape, axes)
+        if path.endswith("/k") or path.endswith("/v") or "cross_kv" in path:
+            axes, _ = kv_axes(shape)
+            return spec_for(mesh, shape, axes)
+        if path.endswith("/ssm"):
+            lead = rank - 4
+            axes = (None,) * lead + (bax, MODEL, None, None)
+            return spec_for(mesh, shape, axes)
+        if path.endswith("/conv"):
+            lead = rank - 3
+            axes = (None,) * lead + (bax, None, MODEL)
+            return spec_for(mesh, shape, axes)
+        return P()
+
+    return map_with_path(leaf, state)
+
+
+def decode_state_shardings(mesh: Mesh, cfg: ModelConfig, state: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        decode_state_specs(mesh, cfg, state),
+        is_leaf=lambda x: isinstance(x, P),
+    )

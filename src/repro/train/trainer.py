@@ -1,0 +1,230 @@
+"""Training / inference / serving step builders.
+
+``make_train_step`` produces the pjit-able RL policy-gradient step
+(GRPO/PPO-style clipped surrogate with token-level loss, per the paper's
+§5.1 modifications); ``make_prefill_step`` is the *inference* worker
+(logprob recompute); ``make_serve_step`` is the decode worker.
+
+These are the compute bodies that the M2Flow workers (repro.core) invoke —
+the system schedules *around* them without touching their semantics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.layers import token_logprobs
+from repro.train.optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
+
+Batch = Dict[str, jax.Array]
+
+
+class TrainHParams(NamedTuple):
+    optimizer: AdamWConfig = AdamWConfig()
+    n_microbatches: int = 1
+    remat: bool = False
+    compute_dtype: Any = jnp.float32
+    # PPO/GRPO clipping
+    clip_eps_low: float = 0.2
+    clip_eps_high: float = 0.2
+    kl_coef: float = 0.0
+    entropy_coef: float = 0.0
+    # value-function loss weight (PPO critic head; 0 disables)
+    value_coef: float = 0.0
+    # PartitionSpec for the residual stream (sequence parallelism); None off
+    act_spec: Any = None
+    # PartitionSpec pytree for grads/accumulator (pins the microbatch-scan
+    # carry sharding — otherwise XLA replicates embed grads); None off
+    grad_specs: Any = None
+    # dtype of the gradient accumulator across microbatches; f32 default,
+    # bf16 halves the largest training temp (tradeoff logged in §Perf)
+    accum_dtype: Any = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# RL policy loss (token-level, DAPO-style averaging)
+# ---------------------------------------------------------------------------
+def policy_loss(
+    cfg: ModelConfig,
+    hp: TrainHParams,
+    params: Any,
+    batch: Batch,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Clipped-surrogate policy gradient on response tokens.
+
+    batch:
+      tokens        (B, S) int32 — prompt + response
+      old_logprobs  (B, S) f32   — behaviour logprobs, aligned so entry t
+                                   scores tokens[t] (entry 0 unused)
+      advantages    (B, S) f32
+      loss_mask     (B, S) f32   — 1 on response tokens
+      (+ image_embeds / frame_embeds for vlm / encdec archs)
+    """
+    extra = {}
+    for k in ("image_embeds", "frame_embeds"):
+        if k in batch:
+            extra[k] = batch[k]
+    logits, aux = M.forward(
+        params, cfg, batch["tokens"], extra or None, remat=hp.remat,
+        act_spec=hp.act_spec,
+    )
+    # logits[t] predicts tokens[t+1]
+    lp = token_logprobs(logits[:, :-1], batch["tokens"][:, 1:],
+                        cfg.vocab_size)  # (B, S-1)
+    old_lp = batch["old_logprobs"][:, 1:]
+    adv = batch["advantages"][:, 1:]
+    mask = batch["loss_mask"][:, 1:].astype(jnp.float32)
+
+    log_ratio = lp - old_lp
+    ratio = jnp.exp(log_ratio)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - hp.clip_eps_low, 1.0 + hp.clip_eps_high) * adv
+    pg = -jnp.minimum(unclipped, clipped)
+
+    # token-level averaging (DAPO): sum over all tokens / total token count,
+    # so long responses do not dominate per-sequence averages.
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(pg * mask) / denom
+
+    metrics = {
+        "pg_loss": loss,
+        "aux_loss": aux,
+        "ratio_mean": jnp.sum(ratio * mask) / denom,
+        "approx_kl": jnp.sum((ratio - 1.0 - log_ratio) * mask) / denom,
+        "clip_frac": jnp.sum(
+            (jnp.abs(ratio - 1.0) > hp.clip_eps_high).astype(jnp.float32) * mask
+        ) / denom,
+    }
+    if hp.entropy_coef > 0:
+        lg = logits[:, :-1].astype(jnp.float32)
+        V = lg.shape[-1]
+        lg = jnp.where(jnp.arange(V) < cfg.vocab_size, lg, -1e30)
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)  # (B, S-1)
+        ent_mean = jnp.sum(ent * mask) / denom
+        loss = loss - hp.entropy_coef * ent_mean
+        metrics["entropy"] = ent_mean
+    if hp.kl_coef > 0 and "ref_logprobs" in batch:
+        ref = batch["ref_logprobs"][:, 1:]
+        # k3 estimator (Schulman): e^(ref-lp) - (ref-lp) - 1
+        d = ref - lp
+        kl = jnp.sum((jnp.exp(d) - d - 1.0) * mask) / denom
+        loss = loss + hp.kl_coef * kl
+        metrics["kl_ref"] = kl
+    loss = loss + aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def lm_loss(cfg: ModelConfig, hp: TrainHParams, params: Any,
+            batch: Batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Plain next-token cross-entropy (used for supervised warm-up/tests)."""
+    logits, aux = M.forward(params, cfg, batch["tokens"], remat=hp.remat)
+    lp = token_logprobs(logits[:, :-1], batch["tokens"][:, 1:],
+                        cfg.vocab_size)
+    mask = batch.get("loss_mask", jnp.ones_like(lp))[:, 1:] if "loss_mask" in batch \
+        else jnp.ones_like(lp)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = -jnp.sum(lp * mask) / denom + aux
+    return loss, {"loss": loss, "ce": loss - aux}
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, hp: TrainHParams, loss_fn=policy_loss):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Gradient accumulation: the global batch is split into n_microbatches
+    chunks scanned sequentially (grads averaged), bounding activation
+    memory at one microbatch.
+    """
+
+    def grads_of(params, mb: Batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, hp, p, mb), has_aux=True
+        )(params)
+
+    def pin(grads):
+        if hp.grad_specs is None:
+            return grads
+        from jax.sharding import PartitionSpec
+        from repro.utils.sharding import shard_hint
+        return jax.tree_util.tree_map(
+            lambda g, sp: shard_hint(g, sp), grads, hp.grad_specs,
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+    def train_step(params, opt_state: AdamWState, batch: Batch):
+        nm = hp.n_microbatches
+        if nm <= 1:
+            (loss, metrics), grads = grads_of(params, batch)
+            grads = pin(grads)
+        else:
+            def reshape(x):
+                return x.reshape((nm, x.shape[0] // nm) + x.shape[1:])
+            mbs = jax.tree_util.tree_map(reshape, batch)
+
+            def body(acc, mb):
+                (l, m), g = grads_of(params, mb)
+                acc_g, acc_l = acc
+                g = pin(jax.tree_util.tree_map(
+                    lambda x: x.astype(hp.accum_dtype), g))
+                acc_g = pin(jax.tree_util.tree_map(jnp.add, acc_g, g))
+                return (acc_g, acc_l + l), m
+
+            zero = pin(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, hp.accum_dtype), params
+            ))
+            (gsum, lsum), ms = jax.lax.scan(body, (zero, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / nm, gsum)
+            loss = lsum / nm
+            metrics = jax.tree_util.tree_map(lambda x: x[-1], ms)
+        params, opt_state, opt_metrics = adamw_update(
+            hp.optimizer, params, grads, opt_state
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, hp: Optional[TrainHParams] = None):
+    """Inference worker: recompute per-token logprobs for a rollout batch."""
+    hp = hp or TrainHParams()
+
+    def prefill_step(params, batch: Batch) -> jax.Array:
+        extra = {}
+        for k in ("image_embeds", "frame_embeds"):
+            if k in batch:
+                extra[k] = batch[k]
+        logits, _ = M.forward(params, cfg, batch["tokens"], extra or None,
+                              remat=hp.remat, act_spec=hp.act_spec)
+        lp = token_logprobs(logits[:, :-1], batch["tokens"][:, 1:],
+                            cfg.vocab_size)
+        # align: entry t scores tokens[t]; entry 0 zero
+        return jnp.pad(lp, ((0, 0), (1, 0)))
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, unroll: int = 1):
+    """Decode worker: ONE new token against the standing cache."""
+
+    def serve_step(params, token: jax.Array, state: M.DecodeState,
+                   pos: jax.Array):
+        logits, state = M.decode_step(params, cfg, token, state, pos,
+                                      unroll=unroll)
+        return logits, state
+
+    return serve_step
+
+
+def init_train_state(key, cfg: ModelConfig, dtype=jnp.float32):
+    params = M.init_model(key, cfg, dtype)
+    return params, init_adamw(params)

@@ -1,0 +1,1 @@
+from repro.utils.hardware import TPU_V5E, DEFAULT_CHIP, ChipSpec  # noqa: F401

@@ -1,0 +1,32 @@
+"""Target-hardware constants (TPU v5e) used by the roofline analysis."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float  # FLOP/s per chip
+    hbm_bandwidth: float  # bytes/s per chip
+    ici_link_bandwidth: float  # bytes/s per link
+    hbm_bytes: float  # capacity per chip
+    vmem_bytes: float
+
+
+# Per the assignment: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    ici_link_bandwidth=50e9,
+    hbm_bytes=16 * 1024**3,
+    vmem_bytes=128 * 1024**2,
+)
+
+DEFAULT_CHIP = TPU_V5E
+
+# Reference profile constants for the *paper's* cluster (H100), used only
+# by the event-simulator profiles that mimic Fig. 2/3 workloads.
+H100_PEAK_FLOPS_BF16 = 989e12
+H100_HBM_BW = 3.35e12

@@ -1,0 +1,271 @@
+"""Static analysis of compiled (post-SPMD, per-device) HLO text.
+
+``compiled.cost_analysis()`` on the CPU backend counts each while-loop
+body ONCE, which under-counts scan-over-layers models by ~num_layers×.
+This module walks the HLO call graph from ENTRY, multiplying while-loop
+bodies by their ``known_trip_count``, and derives:
+
+  * flops              — 2·M·N·K for every ``dot`` (incl. dots inside
+                         fusions), window-scaled for convolutions
+  * bytes              — Σ (result + operand bytes) of top-level
+                         instructions (fusion internals excluded — they
+                         live in registers/VMEM, exactly the roofline's
+                         HBM-traffic view)
+  * collective bytes   — Σ result bytes of all-gather / all-reduce /
+                         reduce-scatter / all-to-all / collective-permute
+                         (async -start counted once, -done skipped)
+
+All numbers are PER DEVICE (the HLO module is the per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s+\((.*)\)\s*->")
+# tuple result shapes may contain "/*index=N*/" comments (which contain
+# '='), so the tuple alternative matches anything up to the closing paren
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[^\s]+)\s+([\w\-]+)\("
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_WINDOW_RE = re.compile(r"window=\{[^}]*?size=([\dx]+)")
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]  # param name -> shape string
+    instrs: List[Instr]
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        m = _COMP_HEADER_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            name, params_str = m.groups()
+            params: Dict[str, str] = {}
+            for pm in re.finditer(r"([\w.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                  params_str):
+                params[pm.group(1)] = pm.group(2).strip()
+            cur = Computation(name=name, params=params, instrs=[])
+            comps[name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry = name
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            if line.strip() == "}":
+                cur = None
+            continue
+        iname, shape, opcode = im.groups()
+        rest = line[im.end():]
+        # operand segment: up to the matching close paren (operands carry
+        # no parens in post-optimization HLO text)
+        close = rest.find(")")
+        arg_seg = rest[:close] if close >= 0 else rest
+        operands = re.findall(r"%([\w.\-]+)", arg_seg)
+        attrs = rest[close + 1:] if close >= 0 else ""
+        cur.instrs.append(Instr(iname, shape, opcode, operands, attrs))
+    return comps, entry
+
+
+@dataclasses.dataclass
+class HLOStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in _COLLECTIVES})
+    collective_bytes_by_kind: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in _COLLECTIVES})
+    dot_flops: float = 0.0
+    conv_flops: float = 0.0
+    unknown_trip_loops: int = 0
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    # control flow: carries alias between iterations; the body's own
+    # instructions are charged when the body computation is visited
+    "while", "conditional", "call",
+}
+
+
+def analyze(text: str) -> HLOStats:
+    comps, entry = parse_hlo(text)
+    stats = HLOStats()
+    if entry is None:
+        return stats
+
+    def shape_of(comp: Computation, name: str) -> Optional[str]:
+        if name in comp.params:
+            return comp.params[name]
+        for ins in comp.instrs:
+            if ins.name == name:
+                return ins.shape
+        return None
+
+    seen_guard: List[Tuple[str, float]] = []
+
+    def visit(comp_name: str, mult: float, count_bytes: bool) -> None:
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        if len(seen_guard) > 10000:  # recursion safety
+            return
+        seen_guard.append((comp_name, mult))
+        for ins in comp.instrs:
+            op = ins.opcode
+            # ---- flops ----
+            if op == "dot":
+                lhs_shape = shape_of(comp, ins.operands[0]) if ins.operands else None
+                k = 1
+                if lhs_shape:
+                    dims = _shape_dims(lhs_shape)
+                    if dims:
+                        lhs_dims = dims[0][1]
+                        cm = _LHS_CONTRACT_RE.search(ins.attrs)
+                        if cm and cm.group(1):
+                            for ci in cm.group(1).split(","):
+                                ci = int(ci)
+                                if ci < len(lhs_dims):
+                                    k *= lhs_dims[ci]
+                res_elems = 0
+                for _, dims in _shape_dims(ins.shape):
+                    n = 1
+                    for d in dims:
+                        n *= d
+                    res_elems += n
+                f = 2.0 * res_elems * k * mult
+                stats.flops += f
+                stats.dot_flops += f
+            elif op == "convolution":
+                wm = _WINDOW_RE.search(ins.attrs)
+                window = 1
+                if wm:
+                    for d in wm.group(1).split("x"):
+                        window *= int(d)
+                res_elems = sum(
+                    int(__import__("numpy").prod(dims)) if dims else 1
+                    for _, dims in _shape_dims(ins.shape))
+                f = 2.0 * res_elems * window * mult
+                stats.flops += f
+                stats.conv_flops += f
+
+            # ---- collectives ----
+            base = op.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                b = _shape_bytes(ins.shape) * mult
+                stats.collective_bytes += b
+                stats.collective_bytes_by_kind[base] += int(b)
+                stats.collective_counts[base] += int(mult)
+
+            # ---- bytes (top-level only) ----
+            # Per-op HBM-traffic model:
+            #   dynamic-slice:        read+write only the slice (result×2)
+            #   dynamic-update-slice: in-place on TPU — read the update,
+            #                         write the region (update×2)
+            #   gather/broadcast:     indexed/scalar reads ≈ result-sized
+            #   default:              result + operands (a fused kernel
+            #                         touches each I/O buffer once)
+            if count_bytes and op not in _SKIP_BYTES_OPS:
+                if op == "dynamic-slice":
+                    b = 2 * _shape_bytes(ins.shape)
+                elif op == "dynamic-update-slice":
+                    upd = (shape_of(comp, ins.operands[1])
+                           if len(ins.operands) > 1 else None)
+                    b = 2 * (_shape_bytes(upd) if upd
+                             else _shape_bytes(ins.shape))
+                elif op in ("gather", "broadcast"):
+                    b = 2 * _shape_bytes(ins.shape)
+                elif op == "scatter":
+                    upd = (shape_of(comp, ins.operands[2])
+                           if len(ins.operands) > 2 else None)
+                    b = 2 * (_shape_bytes(upd) if upd
+                             else _shape_bytes(ins.shape))
+                else:
+                    b = _shape_bytes(ins.shape)
+                    for o in ins.operands:
+                        s = shape_of(comp, o)
+                        if s:
+                            b += _shape_bytes(s)
+                stats.bytes += b * mult
+
+            # ---- recursion ----
+            if op == "while":
+                bm = _BODY_RE.search(ins.attrs)
+                tm = _TRIP_RE.search(ins.attrs)
+                trip = int(tm.group(1)) if tm else 1
+                if tm is None:
+                    stats.unknown_trip_loops += 1
+                if bm:
+                    visit(bm.group(1), mult * trip, count_bytes)
+            elif op == "fusion":
+                cm = _CALLS_RE.search(ins.attrs)
+                if cm:
+                    # fusion internals: dots count, bytes do not
+                    visit(cm.group(1), mult, False)
+            elif op in ("call", "async-start"):
+                cm = _TO_APPLY_RE.search(ins.attrs) or _CALLS_RE.search(ins.attrs)
+                if cm:
+                    visit(cm.group(1), mult, count_bytes)
+            elif op == "conditional":
+                for cm in re.finditer(r"%([\w.\-]+)", ins.attrs):
+                    if cm.group(1) in comps:
+                        visit(cm.group(1), mult, count_bytes)
+
+    visit(entry, 1.0, True)
+    return stats

@@ -1,0 +1,17 @@
+"""Minimal structured logger (stdout, no deps)."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Any
+
+_T0 = time.time()
+VERBOSE = True
+
+
+def log(tag: str, msg: str, **kv: Any) -> None:
+    if not VERBOSE:
+        return
+    extra = " ".join(f"{k}={v}" for k, v in kv.items())
+    sys.stdout.write(f"[{time.time() - _T0:8.2f}s] {tag:12s} {msg} {extra}\n")
+    sys.stdout.flush()

