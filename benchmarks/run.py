@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows (plus the roofline table).
 
   E5 bench_longtail    — Fig. 2  (response-length dynamicity, tail factor)
   E1 bench_exec_modes  — Fig. 8/10 (3 modes × model sizes × cluster scales)
+                         + sync vs async-K off-policy horizon curves
   E2 bench_embodied    — Fig. 9  (ManiSkill/LIBERO placement flip)
   E3 bench_breakdown   — Fig. 11-13 (component latency breakdown)
   E4 bench_scheduler   — Alg. 1 (optimality + runtime)
@@ -27,6 +28,7 @@ def main() -> None:
 
     from benchmarks import bench_exec_modes
     bench_exec_modes.run(tail_factor=tail)
+    bench_exec_modes.run_async(tail_factor=tail)
 
     from benchmarks import bench_embodied
     bench_embodied.run()

@@ -1,15 +1,29 @@
-from repro.core.channel import Channel, ChannelClosed, DeviceLock  # noqa: F401
+from repro.core.channel import (  # noqa: F401
+    AsyncQueue,
+    Channel,
+    ChannelClosed,
+    DeviceLock,
+    StalenessExceeded,
+    VersionedItem,
+)
 from repro.core.controller import Controller, ExecutionPlan  # noqa: F401
 from repro.core.flowgraph import FlowGraph, GraphTracer, TraceEvent  # noqa: F401
-from repro.core.pipeline import ExecutionFlowManager, coalesce, split_batch  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    AsyncPipelineDriver,
+    ExecutionFlowManager,
+    coalesce,
+    split_batch,
+)
 from repro.core.placement import Cluster, split_devices  # noqa: F401
 from repro.core.profiler import CostModel, Profiler, paper_like_profiles  # noqa: F401
 from repro.core.scheduler import (  # noqa: F401
+    Async,
     Leaf,
     Pipelined,
     Scheduler,
     SchedulerConfig,
     Temporal,
+    async_makespan,
     collocated_schedule,
     disaggregated_schedule,
 )

@@ -145,6 +145,166 @@ class Channel:
         return self._closed
 
 
+@dataclass
+class VersionedItem:
+    """Payload tagged with the producer's parameter version (off-policy
+    asynchrony, §3.3 extension): staleness of a sample at consumption time
+    is ``consumer_version - version``."""
+    data: Any
+    version: int
+    seq: int
+
+
+class StalenessExceeded(Exception):
+    """A sample older than the staleness bound reached a strict consumer."""
+
+
+class AsyncQueue:
+    """Bounded, weight-versioned channel for cross-iteration pipelining.
+
+    The queue realizes *bounded-staleness asynchrony* between a producer
+    stage (generation, running with parameters at version ``v``) and a
+    consumer stage (training, advancing the parameters to ``v+1, v+2, …``):
+
+    * every ``put`` tags the payload with the producer's current parameter
+      version; versions must be monotone non-decreasing;
+    * capacity equals the staleness bound ``K`` (in flight ≤ K batches), so
+      a producer that syncs weights after each put can never fall more than
+      K versions behind the trainer — the producer *blocks* instead of
+      racing ahead;
+    * the consumer side tracks its own parameter version
+      (:meth:`advance_consumer`); a ``get`` returning a sample with
+      ``staleness > K`` either raises (``stale_policy='strict'``) or drops
+      the sample and returns the next one (``stale_policy='drop'``).
+
+    ``K = 0`` degenerates to fully synchronous on-policy execution: the
+    producer blocks until the consumer has drained and caught up, and every
+    consumed sample has staleness 0.
+    """
+
+    def __init__(self, name: str, *, staleness_bound: int = 1,
+                 stale_policy: str = "strict"):
+        assert staleness_bound >= 0, staleness_bound
+        assert stale_policy in ("strict", "drop"), stale_policy
+        self.name = name
+        self.staleness_bound = staleness_bound
+        self.stale_policy = stale_policy
+        self._q: List[VersionedItem] = []
+        self._seq = 0
+        self._closed = False
+        self._cv = threading.Condition()
+        self._producer_version = -1
+        self._consumer_version = 0
+        self.total_put = 0
+        self.total_get = 0
+        self.dropped_stale = 0
+        self.max_observed_staleness = 0
+
+    # -- producer ----------------------------------------------------------
+    def put(self, data: Any, version: int,
+            timeout: Optional[float] = None) -> None:
+        deadline = time.time() + timeout if timeout is not None else None
+        with self._cv:
+            if self._closed:
+                raise ChannelClosed(self.name)
+            if version < self._producer_version:
+                raise ValueError(
+                    f"{self.name}: version tags must be monotone "
+                    f"({version} < {self._producer_version})")
+            # back-pressure: block while accepting this item could let the
+            # consumer observe staleness > K.  The in-flight count bounds
+            # how far the trainer can advance before this sample is used:
+            # capacity = max(K, 1) items (K=0 still needs one slot to hand
+            # the sync batch over, freshness is enforced on the get side).
+            cap = max(self.staleness_bound, 1)
+            while len(self._q) >= cap and not self._closed:
+                remaining = (deadline - time.time()) if deadline else None
+                if remaining is not None and remaining <= 0:
+                    raise queue.Full()
+                self._cv.wait(timeout=remaining)
+            if self._closed:
+                raise ChannelClosed(self.name)
+            self._q.append(VersionedItem(data=data, version=version,
+                                         seq=self._seq))
+            self._seq += 1
+            self._producer_version = version
+            self.total_put += 1
+            self._cv.notify_all()
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    # -- consumer ----------------------------------------------------------
+    def advance_consumer(self, version: int) -> None:
+        """The trainer publishes its new parameter version after an update."""
+        with self._cv:
+            assert version >= self._consumer_version, (
+                version, self._consumer_version)
+            self._consumer_version = version
+            self._cv.notify_all()
+
+    def wait_for_version(self, min_version: int,
+                         timeout: Optional[float] = None) -> bool:
+        """Producer gate: block until the consumer's parameter version is
+        at least ``min_version``.  Generating item ``i`` only after the
+        consumer reached version ``i - K`` guarantees the staleness of
+        item ``i`` at training time is at most ``K``."""
+        deadline = time.time() + timeout if timeout is not None else None
+        with self._cv:
+            while self._consumer_version < min_version and not self._closed:
+                remaining = (deadline - time.time()) if deadline else None
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._cv.wait(timeout=remaining)
+            return self._consumer_version >= min_version
+
+    def get(self, timeout: Optional[float] = None) -> VersionedItem:
+        """Pop the oldest item; enforce the staleness bound at hand-off."""
+        deadline = time.time() + timeout if timeout is not None else None
+        with self._cv:
+            while True:
+                while not self._q:
+                    if self._closed:
+                        raise ChannelClosed(self.name)
+                    remaining = (deadline - time.time()) if deadline else None
+                    if remaining is not None and remaining <= 0:
+                        raise queue.Empty()
+                    self._cv.wait(timeout=remaining)
+                item = self._q.pop(0)
+                self._cv.notify_all()
+                staleness = self._consumer_version - item.version
+                if staleness > self.staleness_bound:
+                    if self.stale_policy == "drop":
+                        self.dropped_stale += 1
+                        continue
+                    raise StalenessExceeded(
+                        f"{self.name}: sample v{item.version} is "
+                        f"{staleness} versions stale (bound "
+                        f"{self.staleness_bound})")
+                self.total_get += 1
+                self.max_observed_staleness = max(
+                    self.max_observed_staleness, max(staleness, 0))
+                return item
+
+    def qsize(self) -> int:
+        with self._cv:
+            return len(self._q)
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    @property
+    def producer_version(self) -> int:
+        return self._producer_version
+
+    @property
+    def consumer_version(self) -> int:
+        return self._consumer_version
+
+
 class DeviceLock:
     """Distributed device lock with data-dependency acquisition priority.
 

@@ -23,6 +23,7 @@ from repro.core.pipeline import ExecutionFlowManager
 from repro.core.placement import Cluster, split_devices
 from repro.core.profiler import CostModel, Profiler
 from repro.core.scheduler import (
+    Async,
     Leaf,
     Pipelined,
     Scheduler,
@@ -98,6 +99,24 @@ class Controller:
         return ExecutionPlan(schedule=sched, est_time=t, placement=placement,
                              mode=mode)
 
+    def plan_async(self, graph: FlowGraph, *, total_batch: int,
+                   iterations: int = 8,
+                   depths: Optional[List[int]] = None) -> ExecutionPlan:
+        """M2Flow planning with the async off-policy dimension: searches
+        temporal/spatial/async_depth and returns the horizon-optimal plan.
+        ``est_time`` is the estimated wall-clock makespan of the whole
+        ``iterations`` horizon (schedule_async selects with a freshness
+        tax but always returns the untaxed time)."""
+        n = self.cluster.num_devices
+        sch = Scheduler(self.profiles, self.scheduler_cfg)
+        t, sched = sch.schedule_async(graph, n, total_batch,
+                                      iterations=iterations, depths=depths)
+        mode = (f"async-{sched.depth}" if isinstance(sched, Async)
+                else "auto")
+        placement = self._place(sched, list(range(n)))
+        return ExecutionPlan(schedule=sched, est_time=t, placement=placement,
+                             mode=mode)
+
     def _place(self, sched, devices: List[int]) -> Dict[str, List[int]]:
         """Spatial stages get disjoint device slices; temporal stages share."""
         out: Dict[str, List[int]] = {}
@@ -108,7 +127,8 @@ class Controller:
             out.update(self._place(sched.s, devices))
             out.update(self._place(sched.t, devices))
             return out
-        if isinstance(sched, Pipelined):
+        if isinstance(sched, (Pipelined, Async)):
+            # both sides own disjoint device slices
             n_s = sum(l.devices for l in leaves(sched.s))
             out.update(self._place(sched.s, devices[:n_s]))
             out.update(self._place(sched.t, devices[n_s:]))

@@ -23,8 +23,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.channel import Channel, ChannelClosed
-from repro.core.scheduler import Leaf, Pipelined, Temporal, leaves
+from repro.core.channel import AsyncQueue, Channel, ChannelClosed
+from repro.core.scheduler import Async, Leaf, Pipelined, Temporal, leaves
 
 
 def split_batch(batch: Dict[str, np.ndarray], m: int) -> List[Dict[str, np.ndarray]]:
@@ -146,6 +146,15 @@ class ExecutionFlowManager:
             done = [r for r in results if r is not None]
             return coalesce(done) if done else {}
 
+        if isinstance(sched, Async):
+            # A single `run(batch)` call covers ONE iteration of an async
+            # plan: producer side then consumer side on their own device
+            # shares.  The cross-iteration overlap (producer racing ahead
+            # under stale weights) is driven by AsyncPipelineDriver, which
+            # owns the iteration loop and the weight-version bookkeeping.
+            mid = self._run(sched.s, batch)
+            return self._run(sched.t, mid)
+
         raise TypeError(type(sched))
 
     def _devices_of(self, sched) -> set:
@@ -155,3 +164,89 @@ class ExecutionFlowManager:
             if w is not None:
                 out |= set(getattr(w, "devices", ()))
         return out
+
+
+class AsyncPipelineDriver:
+    """Cross-iteration executor for bounded-staleness off-policy training.
+
+    Generation keeps producing rollouts under parameter version ``v`` while
+    the trainer advances to ``v+1, v+2, …`` — the producer is gated so that
+    no sample is ever consumed more than ``staleness_bound`` (K) versions
+    stale:
+
+      * before generating item ``i`` the producer blocks until the
+        consumer has published version ``i - K`` (K = 0 → fully sync);
+      * ``sync_fn(version)`` then pulls the freshest weights into the
+        generation-side workers and the payload is version-tagged on the
+        bounded :class:`AsyncQueue` (capacity = K).  If ``sync_fn``
+        returns an int, that becomes the tag — letting the caller stamp
+        the version of the weights it ACTUALLY pulled (the trainer may
+        have advanced between the gate and the sync, and tags must match
+        the weights the rollout was generated with);
+      * the consumer validates the bound on every ``get`` (strict policy),
+        trains, publishes ``version + 1``, and the cycle continues.
+
+    ``produce_fn(i, version) -> payload`` runs the generation-side stages;
+    ``consume_fn(item: VersionedItem) -> result`` runs the training-side
+    stages (including any staleness importance correction).
+    """
+
+    def __init__(self, *, produce_fn: Callable[[int, int], Any],
+                 consume_fn: Callable[[Any], Any],
+                 sync_fn: Optional[Callable[[int], None]] = None,
+                 staleness_bound: int = 1,
+                 name: str = "async-pipe"):
+        self.produce_fn = produce_fn
+        self.consume_fn = consume_fn
+        self.sync_fn = sync_fn
+        self.staleness_bound = staleness_bound
+        self.queue = AsyncQueue(name, staleness_bound=staleness_bound,
+                                stale_policy="strict")
+        self.results: List[Any] = []
+        self._producer_err: List[BaseException] = []
+
+    @property
+    def version(self) -> int:
+        return self.queue.consumer_version
+
+    def run(self, iterations: int) -> List[Any]:
+        """Run the full horizon; returns per-iteration consumer results."""
+        K = self.staleness_bound
+
+        def producer():
+            try:
+                for i in range(iterations):
+                    # staleness gate: weights for item i are at least v i-K
+                    if not self.queue.wait_for_version(i - K):
+                        # queue closed (consumer died): don't waste a full
+                        # generation pass on a payload whose put can only
+                        # raise ChannelClosed
+                        break
+                    v = self.queue.consumer_version
+                    if self.sync_fn is not None:
+                        synced = self.sync_fn(v)
+                        if isinstance(synced, int):
+                            v = max(v, synced)
+                    payload = self.produce_fn(i, v)
+                    self.queue.put(payload, version=v)
+            except BaseException as e:  # noqa: BLE001
+                self._producer_err.append(e)
+            finally:
+                self.queue.close()
+
+        th = threading.Thread(target=producer, daemon=True)
+        th.start()
+        try:
+            for _ in range(iterations):
+                try:
+                    item = self.queue.get()
+                except ChannelClosed:
+                    break
+                self.results.append(self.consume_fn(item))
+                self.queue.advance_consumer(self.queue.consumer_version + 1)
+        finally:
+            self.queue.close()
+            th.join()
+        if self._producer_err:
+            raise self._producer_err[0]
+        return self.results

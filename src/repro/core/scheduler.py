@@ -65,13 +65,63 @@ class Pipelined:
                 f"{self.t.pretty(indent + '  ')}")
 
 
-Schedule = object  # Leaf | Temporal | Pipelined
+@dataclass(frozen=True)
+class Async:
+    """Cross-ITERATION overlap (bounded-staleness off-policy pipelining).
+
+    ``s`` (producer: generation side) and ``t`` (consumer: training side)
+    run on DISJOINT device shares; iteration ``i``'s producer may start as
+    soon as the consumer has finished iteration ``i - depth - 1``, so
+    rollouts are generated with parameters up to ``depth`` versions stale.
+    ``depth = 0`` degenerates to strictly synchronous execution (producer
+    waits for every update).  Costed over an ``iterations`` horizon — the
+    steady-state increment is the bottleneck side, not the sum.
+    """
+    s: "Schedule"
+    t: "Schedule"
+    depth: int        # staleness bound K (versions)
+    iterations: int   # horizon the schedule was costed over
+    n_s: int
+    n_t: int
+
+    def pretty(self, indent: str = "") -> str:
+        return (f"{indent}Async(K={self.depth}, iters={self.iterations}, "
+                f"N={self.n_s}+{self.n_t})\n"
+                f"{self.s.pretty(indent + '  ')}\n"
+                f"{self.t.pretty(indent + '  ')}")
+
+
+Schedule = object  # Leaf | Temporal | Pipelined | Async
 
 
 def leaves(s: Schedule) -> List[Leaf]:
     if isinstance(s, Leaf):
         return [s]
     return leaves(s.s) + leaves(s.t)
+
+
+def async_makespan(t_s: float, t_t: float, depth: int,
+                   iterations: int) -> float:
+    """Analytic horizon makespan of an Async schedule — the recurrence the
+    event simulator replays span-by-span (they must agree exactly):
+
+        s_end[i] = max(s_end[i-1], t_end[i-depth-1]) + t_s
+        t_end[i] = max(s_end[i], t_end[i-1]) + t_t
+
+    The ``t_end[i-depth-1]`` term is the staleness back-pressure: the
+    producer may run at most ``depth`` updates ahead of the trainer.
+    """
+    if iterations < 1:
+        raise ValueError(f"iterations must be >= 1, got {iterations}")
+    s_end = [0.0] * iterations
+    t_end = [0.0] * iterations
+    for i in range(iterations):
+        gate = t_end[i - depth - 1] if i - depth - 1 >= 0 else 0.0
+        s_prev = s_end[i - 1] if i >= 1 else 0.0
+        s_end[i] = max(s_prev, gate) + t_s
+        t_prev = t_end[i - 1] if i >= 1 else 0.0
+        t_end[i] = max(s_end[i], t_prev) + t_t
+    return t_end[-1]
 
 
 # ---------------------------------------------------------------------------
@@ -87,6 +137,13 @@ class SchedulerConfig:
     device_quantum: int = 1
     # memory capacity per device (bytes); 0 disables feasibility checks
     device_memory: float = 0.0
+    # --- async off-policy dimension (cross-iteration overlap) ---
+    # candidate staleness bounds K searched by schedule_async; 0 = sync
+    async_depths: Tuple[int, ...] = (0, 1, 2, 4)
+    # freshness cost: stale samples need importance correction and carry
+    # less learning signal per sample; modeled as a fractional throughput
+    # tax per version of staleness (cost *= 1 + penalty * K).
+    staleness_penalty: float = 0.03
 
 
 class Scheduler:
@@ -108,6 +165,60 @@ class Scheduler:
         dag, members = graph.condense()
         self._members = members
         return self._find(dag, n_devices, M)
+
+    def schedule_async(self, graph: FlowGraph, n_devices: int,
+                       total_batch: Optional[int] = None,
+                       iterations: int = 8,
+                       depths: Optional[Sequence[int]] = None
+                       ) -> Tuple[float, Schedule]:
+        """Extended search over (temporal, spatial, async_depth).
+
+        For ``K = 0`` the candidate is the plain Algorithm-1 schedule run
+        ``iterations`` times back-to-back.  For ``K >= 1`` every s-t cut
+        and device split becomes an :class:`Async` candidate: the producer
+        side keeps generating under stale parameters while the consumer
+        side trains, gated so staleness never exceeds K.  Candidates are
+        SELECTED by ``async_makespan * (1 + staleness_penalty * K)`` — the
+        freshness tax makes ever-larger K unattractive once the bottleneck
+        stage is saturated — but the RETURNED time is always the untaxed
+        horizon makespan, directly comparable to ``schedule()`` times and
+        to the event simulator's replay.  The schedule is an
+        :class:`Async` node when some K >= 1 wins, otherwise the plain
+        Algorithm-1 schedule (run ``iterations`` times back-to-back).
+        """
+        if iterations < 1:
+            raise ValueError(f"iterations must be >= 1, got {iterations}")
+        M = total_batch or self.cfg.total_batch
+        depths = tuple(depths if depths is not None
+                       else self.cfg.async_depths)
+        self._total = M
+        dag, members = graph.condense()
+        self._members = members
+
+        # K = 0 baseline: the unconstrained Algorithm-1 plan, repeated.
+        t_sync, s_sync = self._find(dag, n_devices, M)
+        best_obj: float = t_sync * iterations  # selection objective
+        best_t: float = t_sync * iterations    # untaxed makespan
+        best_s: Schedule = s_sync
+        for K in depths:
+            if K < 1:
+                continue
+            for s_set, t_set in dag.st_cuts():
+                gs, gt = dag.subgraph(s_set), dag.subgraph(t_set)
+                for n_s in self._device_splits(n_devices):
+                    n_t = n_devices - n_s
+                    if not self._fits(s_set, n_s, M) or \
+                       not self._fits(t_set, n_t, M):
+                        continue
+                    ts, ss = self._find(gs, n_s, M)
+                    tt, st = self._find(gt, n_t, M)
+                    span = async_makespan(ts, tt, K, iterations)
+                    cand = span * (1.0 + self.cfg.staleness_penalty * K)
+                    if cand < best_obj:
+                        best_obj = cand
+                        best_t = span
+                        best_s = Async(ss, st, K, iterations, n_s, n_t)
+        return best_t, best_s
 
     # -- Algorithm 1: FindSchedule -----------------------------------------
     def _find(self, g: FlowGraph, n: int, batch: int

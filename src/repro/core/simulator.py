@@ -17,7 +17,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.profiler import CostModel
-from repro.core.scheduler import Leaf, Pipelined, Temporal
+from repro.core.scheduler import Async, Leaf, Pipelined, Temporal
 
 
 @dataclass
@@ -83,6 +83,25 @@ class Simulator:
         end = self._run(sched, total_batch, t0, spans)
         return SimResult(makespan=end - t0, spans=spans)
 
+    def run_iterations(self, sched, total_batch: int, iterations: int,
+                       t0: float = 0.0) -> SimResult:
+        """Horizon replay: an Async schedule embeds its own iteration
+        count (which must agree with ``iterations`` — a silent mismatch
+        would skew any tokens/makespan throughput the caller derives);
+        any other schedule runs back-to-back (the sync baseline)."""
+        if isinstance(sched, Async):
+            if sched.iterations != iterations:
+                raise ValueError(
+                    f"Async schedule was built for {sched.iterations} "
+                    f"iterations, asked to replay {iterations}")
+            return self.run(sched, total_batch, t0)
+        self._total = total_batch
+        spans: List[Span] = []
+        t = t0
+        for _ in range(iterations):
+            t = self._run(sched, total_batch, t, spans)
+        return SimResult(makespan=t - t0, spans=spans)
+
     def _run(self, sched, batch: int, t0: float, spans: List[Span]) -> float:
         if isinstance(sched, Leaf):
             t = self._leaf_time(sched, batch)
@@ -122,6 +141,27 @@ class Simulator:
                 spans.extend(t_spans)
                 t_end[i] = start + dur_t
                 prev_t = t_end[i]
+            return t_end[-1]
+
+        if isinstance(sched, Async):
+            # Cross-iteration overlap with bounded staleness K: iteration
+            # i's producer starts once (a) its own previous iteration and
+            # (b) the consumer's iteration i-K-1 have finished — the exact
+            # recurrence of scheduler.async_makespan, replayed with spans
+            # (chunk = iteration index).
+            I, K = sched.iterations, sched.depth
+            dur_s = self._stage_time(sched.s, batch)
+            dur_t = self._stage_time(sched.t, batch)
+            s_end = [0.0] * I
+            t_end = [0.0] * I
+            for i in range(I):
+                gate = t_end[i - K - 1] if i - K - 1 >= 0 else t0
+                start_s = max(s_end[i - 1] if i >= 1 else t0, gate)
+                self._run_stage(sched.s, batch, start_s, spans, i)
+                s_end[i] = start_s + dur_s
+                start_t = max(s_end[i], t_end[i - 1] if i >= 1 else t0)
+                self._run_stage(sched.t, batch, start_t, spans, i)
+                t_end[i] = start_t + dur_t
             return t_end[-1]
 
         raise TypeError(type(sched))

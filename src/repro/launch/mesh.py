@@ -7,18 +7,31 @@ dry-run sees 512 forced host devices).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax.sharding has no AxisType
+    AxisType = None
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    """``jax.make_mesh`` across jax versions: pass ``axis_types`` only when
+    the pinned jax supports it; otherwise plain axis handling."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(model: int = 1, data: int = 1) -> Mesh:
     """Small mesh over however many local devices exist (tests)."""
     n = len(jax.devices())
     assert model * data <= n, (model, data, n)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))

@@ -2,6 +2,7 @@ from repro.rl.advantage import (  # noqa: F401
     gae_advantages,
     grpo_advantages,
     reinforce_pp_advantages,
+    staleness_importance_weights,
     whiten,
 )
 from repro.rl.env import EnvConfig, VecReachEnv  # noqa: F401

@@ -62,6 +62,43 @@ def broadcast_to_tokens(adv_seq: np.ndarray, loss_mask: np.ndarray
     return adv_seq[:, None].astype(np.float32) * loss_mask.astype(np.float32)
 
 
+def staleness_importance_weights(behavior_logprobs: np.ndarray,
+                                 target_logprobs: np.ndarray,
+                                 loss_mask: np.ndarray,
+                                 *, staleness: int,
+                                 clip_ratio: float = 2.0) -> np.ndarray:
+    """Per-token truncation dampers realizing truncated importance
+    sampling for off-policy (stale) samples.
+
+    A rollout generated under parameters ``v`` but trained at ``v + s``
+    (``s`` = staleness, bounded by the AsyncQueue's K) needs the
+    truncated-IS weight ``min(exp(Δ), clip_ratio)`` where
+    ``Δ = logπ_target − logπ_behavior``.  The behavior-referenced PPO
+    ratio in the loss ALREADY equals ``exp(Δ)`` at the start of the
+    update, so multiplying advantages by the full ratio would count the
+    off-policy gap twice.  This returns only the *truncation factor*
+
+        w = min(1, clip_ratio · exp(−Δ))
+
+    so that (loss ratio at train start) × w = min(exp(Δ), clip_ratio) —
+    the RollArt/AReaL-style truncated importance weight, applied exactly
+    once.  Pass the SAME behavior logprobs the loss references
+    (``old_logprobs``) so the two factors cancel token-for-token.
+
+    ``staleness == 0`` means behavior and target policy are the SAME
+    parameters, so the method returns exactly 1.0 everywhere — async depth
+    K = 0 reduces bit-for-bit to synchronous on-policy GRPO.
+
+    Shapes: all (B, S); returns (B, S) float32 with 1.0 off-mask.
+    """
+    if staleness <= 0:
+        return np.ones_like(loss_mask, dtype=np.float32)
+    delta = np.clip(target_logprobs - behavior_logprobs, -20.0, 20.0)
+    w = np.minimum(1.0, clip_ratio * np.exp(-delta)).astype(np.float32)
+    mask = loss_mask.astype(bool)
+    return np.where(mask, w, np.float32(1.0))
+
+
 def whiten(x: np.ndarray, mask: Optional[np.ndarray] = None,
            eps: float = 1e-6) -> np.ndarray:
     if mask is None:

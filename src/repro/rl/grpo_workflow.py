@@ -57,10 +57,24 @@ class GRPOConfig:
     mode: str = "auto"  # auto | collocated | disaggregated
     seed: int = 0
     profile_batches: tuple = (8, 32)
-    # AReaL-style one-step off-policy asynchrony (paper §4): iteration i
-    # rolls out with the weights of iteration i-1 while i-1's training
-    # update runs concurrently; the PPO clip absorbs the staleness.
+    # Bounded-staleness off-policy asynchrony: rollouts for iteration i may
+    # be generated with parameters up to `async_depth` (K) versions stale
+    # while training runs concurrently; samples are importance-corrected
+    # per token (rl.advantage.staleness_importance_weights).  K = 0 is
+    # fully synchronous on-policy execution.  K >= 1 supersedes `mode`
+    # (the async horizon plan replaces the per-iteration plan).
+    async_depth: int = 0
+    # truncation bound for the per-token importance ratios
+    staleness_clip: float = 2.0
+    # apply the correction (disable to get raw clipped-PPO staleness
+    # handling, the pre-correction behaviour)
+    staleness_correction: bool = True
+    # legacy alias (AReaL-style 1-step asynchrony): maps to async_depth=1
     async_offpolicy: bool = False
+
+    def __post_init__(self):
+        if self.async_offpolicy and self.async_depth == 0:
+            self.async_depth = 1
 
 
 @dataclass
@@ -172,20 +186,34 @@ class GRPORunner:
             granularity_divisors=(1, 2, 4),
             device_quantum=2,
         )
-        self.plan = self.controller.plan(
-            self.graph, total_batch=self.rl.batch_size, mode=self.rl.mode)
+        if self.rl.async_depth > 0:
+            # Horizon plan with the configured staleness bound.  NOTE:
+            # async_depth supersedes rl.mode, and on this single-host
+            # executor the plan's device placement is advisory — the
+            # AsyncPipelineDriver realizes the cross-iteration overlap
+            # (the plan's defining feature) directly on the workers; the
+            # placement column matters when workers map to real device
+            # slices (cluster deployment).
+            self.plan = self.controller.plan_async(
+                self.graph, total_batch=self.rl.batch_size,
+                iterations=self.rl.iterations,
+                depths=[self.rl.async_depth])
+        else:
+            self.plan = self.controller.plan(
+                self.graph, total_batch=self.rl.batch_size,
+                mode=self.rl.mode)
 
     # ------------------------------------------------------------------
     def run_iteration(self, it: int) -> IterationStats:
         t0 = time.perf_counter()
-        if self.rl.async_offpolicy:
-            out = self._run_iteration_async()
-        else:
-            self._sync_weights()
-            batch = self._expand_groups(self.data.next_batch())
-            out = self.controller.execute(
-                self.plan, self.workers, self.task_fns, batch)
+        self._sync_weights()
+        batch = self._expand_groups(self.data.next_batch())
+        out = self.controller.execute(
+            self.plan, self.workers, self.task_fns, batch)
         wall = time.perf_counter() - t0
+        return self._record_stats(it, wall, out)
+
+    def _record_stats(self, it: int, wall: float, out) -> IterationStats:
         rewards = out.get("rewards", np.zeros(1))
         acc = float((rewards > 0).mean())
         st = IterationStats(
@@ -196,43 +224,93 @@ class GRPORunner:
         self.stats.append(st)
         return st
 
-    def _run_iteration_async(self):
-        """One-step off-policy iteration: rollout(i) with stale weights
-        overlaps train(i-1) running in a background thread."""
-        import threading
+    # ------------------------------------------------------------------
+    # Bounded-staleness off-policy loop (async_depth = K >= 1)
+    # ------------------------------------------------------------------
+    def _run_async_horizon(self, verbose: bool) -> None:
+        """Drive the whole horizon through the AsyncPipelineDriver:
+        generation keeps producing rollouts under parameter version v while
+        the trainer advances to v+1, …; the queue's staleness bound K and
+        the per-token importance correction keep the update sound.
 
-        batch = self._expand_groups(self.data.next_batch())
-        # rollout -> inference -> reward with the CURRENT (stale) weights
-        chunk = self.task_fns["rollout"](self.rollout, batch)
-        chunk = self.task_fns["inference"](self.inference, chunk)
-        chunk = self.task_fns["reward"](self.reward, chunk)
-        # wait for the previous update, then kick off this one
-        prev = getattr(self, "_train_thread", None)
-        if prev is not None:
-            prev.join()
-        result = {}
+        Thread discipline: the trainer publishes an immutable
+        ``(version, params)`` pair after each update; the producer thread
+        is the ONLY writer of the rollout/inference workers' registered
+        state, and the consumer re-scores stale samples with explicit
+        params (no shared-state mutation) — so version tags always match
+        the weights a rollout was actually generated with."""
+        from repro.core.pipeline import AsyncPipelineDriver
+        from repro.rl.advantage import staleness_importance_weights
 
-        def train():
-            result.update(self.task_fns["actor"](self.actor, chunk))
+        # atomically-swapped (version, params) snapshot; version counts
+        # completed trainer updates and always matches the params beside it
+        self._published = (0, self.actor.params())
+        t_prev = time.perf_counter()
 
-        th = threading.Thread(target=train, daemon=True)
-        th.start()
-        self._train_thread = th
-        # sync the NOW-stale-by-one weights for the next rollout
-        self._sync_weights()
-        return chunk
+        def sync(_gate_version: int) -> int:
+            version, params = self._published
+            self.rollout.update_weights(params)
+            self.inference.update_weights(params)
+            return version  # tag = the version actually pulled
 
-    def finish_async(self) -> None:
-        th = getattr(self, "_train_thread", None)
-        if th is not None:
-            th.join()
-            self._train_thread = None
+        def produce(i: int, version: int):
+            # rollout -> behaviour logprobs -> reward, all at `version`
+            batch = self._expand_groups(self.data.next_batch())
+            chunk = self.task_fns["rollout"](self.rollout, batch)
+            chunk = self.task_fns["inference"](self.inference, chunk)
+            chunk = self.task_fns["reward"](self.reward, chunk)
+            return chunk
+
+        def consume(item):
+            nonlocal t_prev
+            chunk = item.data
+            version = self._published[0]
+            staleness = version - item.version
+            if staleness > 0 and self.rl.staleness_correction:
+                # Re-score the stale rollout at the CURRENT parameters
+                # (explicit params: the shared inference worker's state
+                # belongs to the producer thread) and damp each token so
+                # the loss's behavior-referenced ratio becomes a
+                # TRUNCATED importance weight.  The behavior term is
+                # old_logprobs — the same prefill recompute the loss
+                # references — so the damper cancels token-for-token.
+                chunk = self.inference.compute_logprobs(
+                    chunk, key="target_logprobs",
+                    params=self._published[1])
+                rho = staleness_importance_weights(
+                    chunk["old_logprobs"], chunk["target_logprobs"],
+                    chunk["loss_mask"], staleness=staleness,
+                    clip_ratio=self.rl.staleness_clip)
+                chunk["advantages"] = chunk["advantages"] * rho
+            out = self.task_fns["actor"](self.actor, chunk)
+            self._published = (version + 1, self.actor.params())
+            now = time.perf_counter()
+            st = self._record_stats(version, now - t_prev, out)
+            t_prev = now
+            if verbose:
+                print(f"iter {st.iteration:3d}  wall={st.wall_time:6.2f}s "
+                      f"stale={staleness} reward={st.mean_reward:+6.2f} "
+                      f"acc={st.accuracy:5.2f}")
+            return out
+
+        driver = AsyncPipelineDriver(
+            produce_fn=produce, consume_fn=consume, sync_fn=sync,
+            staleness_bound=self.rl.async_depth,
+            name=f"grpo-async-{id(self)}")
+        self._driver = driver
+        driver.run(self.rl.iterations)
+
+    def finish_async(self) -> None:  # kept for API compatibility
+        pass
 
     def run(self, verbose: bool = True) -> List[IterationStats]:
         self.profile()
         self.plan_execution()
         if verbose:
             print(self.plan.pretty())
+        if self.rl.async_depth > 0:
+            self._run_async_horizon(verbose)
+            return self.stats
         for it in range(self.rl.iterations):
             st = self.run_iteration(it)
             if verbose:

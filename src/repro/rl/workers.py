@@ -73,11 +73,20 @@ class InferenceWorker(Worker):
     def update_weights(self, params: Any) -> None:
         self.set_state("params", params)
 
-    def compute_logprobs(self, chunk: Dict[str, np.ndarray]
+    def compute_logprobs(self, chunk: Dict[str, np.ndarray],
+                         key: str = "old_logprobs",
+                         params: Optional[Any] = None
                          ) -> Dict[str, np.ndarray]:
-        params = self.get_state("params")
+        """Prefill recompute.  ``key`` lets the async consumer re-score a
+        stale rollout at the CURRENT parameter version (e.g. into
+        ``'target_logprobs'``) without clobbering the behavior reference;
+        explicit ``params`` scores with those weights WITHOUT touching the
+        worker's registered state (the producer thread owns that state —
+        see GRPORunner._run_async_horizon)."""
+        if params is None:
+            params = self.get_state("params")
         out = dict(chunk)
-        out["old_logprobs"] = np.asarray(
+        out[key] = np.asarray(
             self._step(params, {"tokens": jnp.asarray(chunk["tokens"])}))
         return out
 

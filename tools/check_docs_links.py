@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Docs link-check: every intra-repo markdown link and every
+backtick-quoted repo path referenced in docs/README must resolve.
+
+Checked files:  README.md, docs/*.md
+Checked refs:   [text](relative/path)  markdown links (non-http)
+                `path/to/file.py`      backtick paths that look repo-like
+                `pkg.mod.attr`         dotted repro.* module paths
+
+Exits non-zero listing every dangling reference.
+"""
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#]+)(?:#[^)]*)?\)")
+# backtick path-ish tokens: contain a '/' and end in a known suffix
+BT_PATH = re.compile(r"`([\w./-]+/[\w./-]+\.(?:py|md|yml|yaml|json))`")
+# dotted repro module references like repro.core.scheduler or
+# repro.rl.advantage.staleness_importance_weights
+BT_MOD = re.compile(r"`(repro(?:\.\w+)+)`")
+
+
+def check_file(md: Path, errors: list) -> None:
+    text = md.read_text()
+    base = md.parent
+    for m in MD_LINK.finditer(text):
+        target = m.group(1).strip()
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if not (base / target).exists() and not (ROOT / target).exists():
+            errors.append(f"{md.relative_to(ROOT)}: dangling link {target}")
+    for m in BT_PATH.finditer(text):
+        target = m.group(1)
+        if not (ROOT / target).exists():
+            errors.append(f"{md.relative_to(ROOT)}: missing path {target}")
+    for m in BT_MOD.finditer(text):
+        dotted = m.group(1)
+        parts = dotted.split(".")
+        # try longest importable prefix; the tail may be an attribute
+        for cut in range(len(parts), 0, -1):
+            mod = ".".join(parts[:cut])
+            try:
+                obj = importlib.import_module(mod)
+            except ImportError:
+                continue
+            ok = True
+            for attr in parts[cut:]:
+                if not hasattr(obj, attr):
+                    ok = False
+                    break
+                obj = getattr(obj, attr)
+            if ok:
+                break
+        else:
+            ok = False
+        if not ok:
+            errors.append(f"{md.relative_to(ROOT)}: unresolvable "
+                          f"module ref {dotted}")
+
+
+def main() -> int:
+    sys.path.insert(0, str(ROOT / "src"))
+    files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    errors: list = []
+    for md in files:
+        if md.exists():
+            check_file(md, errors)
+    if errors:
+        print("\n".join(errors))
+        print(f"\n{len(errors)} dangling doc reference(s)")
+        return 1
+    print(f"docs link-check OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
