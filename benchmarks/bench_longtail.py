@@ -1,13 +1,25 @@
 """Fig. 2 analogue: response-length dynamicity and the long-tail stall.
 
-Two parts:
+Three parts:
  (a) REAL measurement — generate with the CPU engine (EOS-terminated
      sampling) and record the response-length distribution;
  (b) production-scale model — lognormal lengths calibrated per §Fig. 2
      ("unfinished responses shrink to <5% quickly"), from which we derive
-     the generation tail factor used by every other benchmark.
+     the generation tail factor used by every other benchmark;
+ (c) static vs continuous batching — the same skewed workload served by
+     the legacy fixed-shape Engine (padded to the longest response) and
+     by the paged continuous-batching PagedEngine; the throughput ratio
+     and the engine-MEASURED tail factor land in ``BENCH_serve.json``
+     (the repo's serving-perf trajectory, refreshed by the CI smoke step).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_longtail [--fast]
+          [--out BENCH_serve.json]
 """
 from __future__ import annotations
+
+import argparse
+import json
+import time
 
 import numpy as np
 
@@ -48,7 +60,145 @@ def real_engine_lengths() -> np.ndarray:
     return lens
 
 
-def run() -> float:
+def _skewed_budgets(n: int, *, slots: int, max_new: int,
+                    seed: int = 0) -> np.ndarray:
+    """Per-request generation budgets with the Fig. 2 shape: most
+    responses are short, ~1/slots run to the cap.  Stragglers are spread
+    so every static batch of ``slots`` contains one — the paper's point
+    that the long tail is present throughout the stage, not clustered."""
+    rng = np.random.default_rng(seed)
+    ls = rng.lognormal(np.log(max_new / 8.0), 0.7, size=n)
+    budgets = np.clip(np.round(ls), 2, max_new // 3).astype(int)
+    # one straggler per static batch, arriving at the head of its group:
+    # under continuous batching the long response overlaps the shorts
+    # that arrive behind it instead of draining alone at the end
+    budgets[0::slots] = max_new
+    return budgets
+
+
+def continuous_vs_static(*, fast: bool = False, out: str | None = None):
+    """Serve one skewed workload through both engines (deliverable c).
+
+    Static = legacy fixed-shape Engine: every batch decodes
+    ``max(budgets)`` steps regardless of how early requests finish.
+    Continuous = PagedEngine: finished requests free their pages and the
+    admission queue backfills the decode batch each step.  Useful work is
+    identical (sum of budgets), so throughput ratio == stall removed.
+    """
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.profiler import engine_cost_model
+    from repro.models import init_model
+    from repro.serve import Engine, PagedEngine
+    from repro.train.data import PromptDataset
+
+    # enough requests that the admission queue keeps every slot busy
+    # through the stragglers' tail (smaller N under-fills the last steps)
+    n_requests = 48 if fast else 96
+    slots = 8
+    prompt_len = 6
+    max_new = 32 if fast else 48
+    page_size = 4
+
+    # big enough that a decode step is compute- (not dispatch-) bound on
+    # CPU — the regime where batching policy, not Python overhead, decides
+    cfg = get_config("yi-9b").reduced().replace(
+        vocab_size=256, d_model=256, num_heads=4, num_kv_heads=2,
+        head_dim=64, d_ff=1024, max_seq_len=max(128, prompt_len + max_new))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    budgets = _skewed_budgets(n_requests, slots=slots, max_new=max_new,
+                              seed=1)
+    ds = PromptDataset(n_requests, prompt_len=prompt_len, seed=0)
+    prompts = np.asarray(ds.next_batch()["prompt_tokens"])
+    useful_tokens = int(budgets.sum())
+
+    # -- static baseline: fixed-shape scan padded to the longest response
+    # (eos=-1: lengths are budget-driven so both engines do the same
+    # useful work and the comparison isolates the batching policy)
+    static_eng = Engine(cfg, max_new_tokens=int(budgets.max()),
+                        temperature=1.0, eos_token=-1)
+    warm = static_eng.generate(params, prompts[:slots],
+                               key=jax.random.PRNGKey(9))
+    warm.tokens.block_until_ready()
+
+    def time_static() -> float:
+        t0 = time.perf_counter()
+        for i in range(0, n_requests, slots):
+            static_eng.generate(
+                params, prompts[i:i + slots],
+                key=jax.random.PRNGKey(i)).tokens.block_until_ready()
+        return time.perf_counter() - t0
+
+    # -- continuous: paged engine, per-request budgets, slot backfill
+    paged_eng = PagedEngine(
+        cfg, max_batch=slots, page_size=page_size,
+        max_seq_len=prompt_len + max_new, max_new_tokens=max_new,
+        temperature=1.0, eos_token=-1,
+        num_pages=slots * -(-(prompt_len + max_new) // page_size) + 1)
+    paged_eng.set_params(params)
+    paged_eng.submit(prompts[0], max_new_tokens=2, seed=123)  # warm-up
+    paged_eng.run()
+    paged_eng.pop_request_records()
+
+    steps_per_pass = [0]
+
+    def time_continuous() -> float:
+        s0 = paged_eng.decode_steps
+        t0 = time.perf_counter()
+        for i in range(n_requests):
+            paged_eng.submit(prompts[i], max_new_tokens=int(budgets[i]),
+                             seed=i)
+        paged_eng.run()
+        steps_per_pass[0] = paged_eng.decode_steps - s0
+        return time.perf_counter() - t0
+
+    # alternate repeats and keep the min per engine: the container's CPU
+    # allocation is bursty, and back-to-back phases would otherwise be
+    # measured under different machine conditions
+    repeats = 3
+    t_static, t_cont = float("inf"), float("inf")
+    for _ in range(repeats):
+        t_static = min(t_static, time_static())
+        t_cont = min(t_cont, time_continuous())
+
+    tok_s_static = useful_tokens / t_static
+    tok_s_cont = useful_tokens / t_cont
+    speedup = t_static / t_cont
+    cm = engine_cost_model("rollout", paged_eng.pop_request_records())
+    emit("longtail.static_batching_us_per_req", t_static * 1e6 / n_requests,
+         f"tok_s={tok_s_static:.0f}")
+    emit("longtail.continuous_batching_us_per_req", t_cont * 1e6 / n_requests,
+         f"tok_s={tok_s_cont:.0f};speedup={speedup:.2f}x")
+    emit("longtail.measured_tail_factor", 0.0,
+         f"tail_factor={cm.tail_factor:.2f}")
+
+    result = {
+        "workload": {
+            "n_requests": n_requests, "slots": slots,
+            "prompt_len": prompt_len, "max_new": max_new,
+            "page_size": page_size, "useful_tokens": useful_tokens,
+            "budget_p50": float(np.percentile(budgets, 50)),
+            "budget_max": int(budgets.max()), "fast_mode": fast,
+        },
+        "static": {"wall_s": t_static, "tok_per_s": tok_s_static},
+        "continuous": {
+            "wall_s": t_cont, "tok_per_s": tok_s_cont,
+            "decode_steps": steps_per_pass[0],
+            "peak_active": paged_eng.scheduler.stats.peak_active,
+        },
+        "repeats": repeats,
+        "speedup": speedup,
+        "measured_tail_factor": cm.tail_factor,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"# wrote {out}")
+    return result
+
+
+def run(*, fast: bool = False, out: str | None = None) -> float:
     lens = real_engine_lengths()
 
     # production-scale length model (Fig. 2 CDF shape)
@@ -65,8 +215,18 @@ def run() -> float:
     # the tail
     idle = 1.0 - L.mean() / L.max()
     emit("longtail.collocated_idle_fraction", 0.0, f"idle={idle:.2f}")
+    # the serving comparison is the expensive part; only run it when a
+    # record was asked for (benchmarks/run.py just needs the tail factor)
+    if out:
+        continuous_vs_static(fast=fast, out=out)
     return tf
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small workload for the CI smoke step")
+    ap.add_argument("--out", default="BENCH_serve.json",
+                    help="where to write the static-vs-continuous record")
+    args = ap.parse_args()
+    run(fast=args.fast, out=args.out)

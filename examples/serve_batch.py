@@ -1,11 +1,26 @@
-"""Batched serving example: continuous batched decode with the KV-cache
-engine — the rollout-worker compute path in isolation (deliverable b).
+"""Batched serving example: static vs continuous batching side by side.
 
-Serves a small model over batched "requests" (synthetic math prompts),
-reporting per-batch latency, tokens/s, and the response-length CDF —
-the long-tail distribution the paper measures in Fig. 2.
+Serves a small model over batched "requests" (synthetic math prompts)
+through either engine:
 
-Run:  PYTHONPATH=src python examples/serve_batch.py [--requests 128]
+  * ``--engine static``  — the legacy fixed-shape engine (every request
+    padded to the longest response; the Fig. 2 long-tail stall);
+  * ``--engine paged``   — the continuous-batching engine (paged
+    KV-cache, per-step join/evict, per-request budgets);
+  * ``--engine both``    — run the same workload through both and report
+    the speedup (the bench_longtail comparison, interactively).
+
+By default each request gets a skewed generation budget (most short, a
+few stragglers at the max — the Fig. 2 long-tail shape); the static
+engine must pad every request to the longest budget, the paged engine
+retires each request at its own budget and backfills the slot.  Pass
+``--uniform`` to give every request the same budget and watch the
+speedup vanish (continuous batching only wins when lengths vary).
+
+Reports per-batch latency, useful tokens/s, and the response-length CDF.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py [--requests 64]
+          [--engine both] [--uniform]
 """
 import argparse
 import sys
@@ -16,45 +31,113 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import init_model
-from repro.serve import Engine
+from repro.serve import Engine, PagedEngine
 from repro.train.data import PromptDataset
+
+
+def make_setup(args):
+    # sized so a decode step is compute-bound on CPU (the regime where
+    # the batching policy, not Python dispatch, decides throughput)
+    cfg = get_config("codeqwen1.5-7b").reduced().replace(
+        vocab_size=256, d_model=256, num_heads=4, num_kv_heads=2,
+        head_dim=64, d_ff=1024,
+        max_seq_len=max(128, 8 + args.max_new))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    data = PromptDataset(args.requests, prompt_len=8, seed=1)
+    prompts = np.asarray(data.next_batch()["prompt_tokens"])
+    return cfg, params, prompts
+
+
+def make_budgets(args):
+    """Per-request generation budgets.  Default: the Fig. 2 long-tail
+    shape (most responses short, one straggler at the cap per static
+    batch); ``--uniform``: everyone gets the same budget, the regime
+    where continuous batching has nothing to reclaim."""
+    if args.uniform:
+        return np.full(args.requests, args.max_new, dtype=int)
+    rng = np.random.default_rng(0)
+    ls = rng.lognormal(np.log(args.max_new / 8.0), 0.7, size=args.requests)
+    budgets = np.clip(np.round(ls), 2, args.max_new // 3).astype(int)
+    budgets[0::args.batch] = args.max_new  # one straggler per static batch
+    return budgets
+
+
+def run_static(cfg, params, prompts, budgets, args):
+    # a fixed-shape scan cannot stop per request: every batch pads to the
+    # longest budget in the workload (eos=-1 so lengths are budget-driven
+    # and the two engines do identical useful work)
+    pad_to = int(budgets.max())
+    eng = Engine(cfg, max_new_tokens=pad_to, temperature=0.8, eos_token=-1)
+    eng.generate(params, jax.numpy.asarray(prompts[:args.batch]),
+                 key=jax.random.PRNGKey(9)).tokens.block_until_ready()
+    total_useful = 0
+    t_start = time.time()
+    for i in range(0, args.requests, args.batch):
+        chunk = prompts[i:i + args.batch]
+        t0 = time.time()
+        eng.generate(params, jax.numpy.asarray(chunk),
+                     key=jax.random.PRNGKey(i)).tokens.block_until_ready()
+        dt = time.time() - t0
+        b = budgets[i:i + args.batch]
+        total_useful += int(b.sum()) + chunk.size
+        print(f"static batch {i // args.batch}: {dt*1e3:7.1f} ms  "
+              f"padded_to={pad_to} useful_mean={b.mean():5.1f}")
+    return time.time() - t_start, total_useful
+
+
+def run_paged(cfg, params, prompts, budgets, args):
+    eng = PagedEngine(cfg, max_batch=args.batch, page_size=8,
+                      max_new_tokens=int(budgets.max()), temperature=0.8,
+                      eos_token=-1)
+    eng.set_params(params)
+    eng.submit(prompts[0], max_new_tokens=2, seed=123)  # warm-up/compile
+    eng.run()
+    t_start = time.time()
+    reqs = [eng.submit(prompts[i], max_new_tokens=int(budgets[i]), seed=i)
+            for i in range(args.requests)]
+    eng.run()
+    wall = time.time() - t_start
+    total_tokens = sum(r.total_len for r in reqs)
+    print(f"paged: {args.requests} requests, {eng.decode_steps} engine "
+          f"steps, peak batch {eng.scheduler.stats.peak_active}")
+    return wall, total_tokens
+
+
+def report(name, wall, total_tokens, n):
+    print(f"[{name}] served {n} requests in {wall:.2f}s "
+          f"({total_tokens / wall:.0f} useful tok/s)\n")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=128)
-    ap.add_argument("--batch", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--engine", choices=("static", "paged", "both"),
+                    default="both")
+    ap.add_argument("--uniform", action="store_true",
+                    help="same budget for every request (no long tail)")
     args = ap.parse_args(argv)
+    cfg, params, prompts = make_setup(args)
+    budgets = make_budgets(args)
 
-    cfg = get_config("codeqwen1.5-7b").reduced().replace(
-        vocab_size=32, d_model=128, num_heads=4, num_kv_heads=4, d_ff=256)
-    params = init_model(jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, max_new_tokens=args.max_new, temperature=0.8)
-    data = PromptDataset(args.batch, prompt_len=8, seed=1)
-
-    lengths, lat = [], []
-    total_tokens = 0
-    t_start = time.time()
-    for i in range(args.requests // args.batch):
-        batch = data.next_batch()
-        t0 = time.time()
-        res = eng.generate(params, np.asarray(batch["prompt_tokens"]),
-                           key=jax.random.PRNGKey(i))
-        dt = time.time() - t0
-        lat.append(dt)
-        new = np.asarray(res.lengths) - batch["prompt_tokens"].shape[1]
-        lengths.extend(new.tolist())
-        total_tokens += int(np.asarray(res.lengths).sum())
-        print(f"batch {i}: {dt*1e3:7.1f} ms  "
-              f"mean_new={new.mean():5.1f} max_new={new.max()}")
-
-    wall = time.time() - t_start
-    ls = np.array(lengths)
-    print(f"\nserved {args.requests} requests in {wall:.2f}s "
-          f"({total_tokens / wall:.0f} tok/s)")
     print("response-length CDF (the Fig. 2 long-tail view):")
     for q in (50, 90, 95, 99, 100):
-        print(f"  p{q:<3d} = {np.percentile(ls, q):5.1f} tokens")
+        print(f"  p{q:<3d} = {np.percentile(budgets, q):5.1f} tokens")
+    print()
+
+    walls = {}
+    if args.engine in ("static", "both"):
+        wall, tok = run_static(cfg, params, prompts, budgets, args)
+        report("static", wall, tok, args.requests)
+        walls["static"] = wall
+    if args.engine in ("paged", "both"):
+        wall, tok = run_paged(cfg, params, prompts, budgets, args)
+        report("paged", wall, tok, args.requests)
+        walls["paged"] = wall
+    if len(walls) == 2:
+        print(f"continuous-batching speedup: "
+              f"{walls['static'] / walls['paged']:.2f}x")
     return 0
 
 

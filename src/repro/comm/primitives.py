@@ -96,28 +96,36 @@ class Router:
             return self._conns[key]
 
     # -- primitives ------------------------------------------------------
-    def send(self, src: str, dst: str, obj: Any, *, async_op: bool = True):
-        """Backend selection happens here: same-device payloads pass by
-        reference; cross-device arrays are resharded with device_put."""
+    def _needs_transfer(self, src: str, dst: str) -> bool:
         src_info, dst_info = self.placement(src), self.placement(dst)
-        payload = Payload.pack(obj, src=src, dst=dst)
-        if (
+        return bool(
             src_info and dst_info
             and src_info["devices"] and dst_info["devices"]
             and src_info["devices"] != dst_info["devices"]
-        ):
-            # cross-device: move leaves (the NCCL/cudaIPC analogue)
-            payload.leaves = [
-                np.asarray(l) if isinstance(l, jax.Array) else l
-                for l in payload.leaves
-            ]
-            payload.meta["backend"] = "device_transfer"
-        else:
-            payload.meta["backend"] = "zero_copy"
+        )
+
+    @staticmethod
+    def _host_leaves(leaves: List[Any]) -> List[Any]:
+        """Move array leaves to host (the NCCL/cudaIPC analogue)."""
+        return [np.asarray(l) if isinstance(l, jax.Array) else l
+                for l in leaves]
+
+    def _dispatch(self, src: str, dst: str, payload: Payload) -> None:
         conn = self._conn(src, dst)
         conn.q.put(payload)
         conn.bytes_sent += payload.nbytes()
         conn.messages += 1
+
+    def send(self, src: str, dst: str, obj: Any, *, async_op: bool = True):
+        """Backend selection happens here: same-device payloads pass by
+        reference; cross-device arrays are resharded with device_put."""
+        payload = Payload.pack(obj, src=src, dst=dst)
+        if self._needs_transfer(src, dst):
+            payload.leaves = self._host_leaves(payload.leaves)
+            payload.meta["backend"] = "device_transfer"
+        else:
+            payload.meta["backend"] = "zero_copy"
+        self._dispatch(src, dst, payload)
         return None
 
     def recv(self, dst: str, src: str, *, timeout: Optional[float] = None) -> Any:
@@ -126,8 +134,23 @@ class Router:
         return payload.unpack()
 
     def broadcast(self, src: str, dsts: List[str], obj: Any) -> None:
+        """One-to-many send that flattens the pytree ONCE and shares the
+        leaf buffers across destinations (leaves are read-only in transit,
+        so structural sharing is safe); the host copy for cross-device
+        destinations is also made at most once."""
+        packed = Payload.pack(obj, src=src)
+        host_leaves: Optional[List[Any]] = None  # lazily built, shared
         for d in dsts:
-            self.send(src, d, obj)
+            if self._needs_transfer(src, d):
+                if host_leaves is None:
+                    host_leaves = self._host_leaves(packed.leaves)
+                leaves, backend = host_leaves, "device_transfer"
+            else:
+                leaves, backend = packed.leaves, "zero_copy"
+            self._dispatch(src, d, Payload(
+                treedef=packed.treedef, leaves=leaves,
+                meta={"src": src, "dst": d, "backend": backend,
+                      "broadcast": True}))
 
     # -- stats -----------------------------------------------------------
     def stats(self) -> Dict[str, Dict[str, int]]:

@@ -17,6 +17,9 @@ class Cluster:
     num_nodes: int = 1
     devices_per_node: int = 8
     _allocations: Dict[str, List[int]] = field(default_factory=dict)
+    # device id -> owner for devices held EXCLUSIVELY; persisted so later
+    # allocations (exclusive or not) cannot land on them
+    _exclusive: Dict[int, str] = field(default_factory=dict)
     _cursor: int = 0
 
     @property
@@ -31,23 +34,55 @@ class Cluster:
                  *, device_ids: Optional[Sequence[int]] = None,
                  exclusive: bool = False) -> List[int]:
         """Allocate ``count`` devices; arbitrary global IDs may be pinned.
-        Non-exclusive allocations may overlap (temporal multiplexing)."""
+
+        Non-exclusive allocations may overlap each other (temporal
+        multiplexing), but exclusivity is enforced in BOTH directions: an
+        exclusive request rejects devices with any current occupant, and
+        every request rejects devices already held exclusively.  Auto
+        assignment (``device_ids=None``) skips ineligible devices instead
+        of failing on them.
+        """
+        occ = self.occupancy()
+
+        def _reject(i: int) -> Optional[str]:
+            if i in self._exclusive and self._exclusive[i] != owner:
+                return (f"device {i} is exclusively held by "
+                        f"'{self._exclusive[i]}'")
+            if exclusive and occ.get(i):
+                return (f"device {i} already occupied by "
+                        f"{occ[i]} (exclusive requested)")
+            return None
+
         if device_ids is not None:
             ids = list(device_ids)
             assert len(ids) == count
-        else:
-            ids = [(self._cursor + i) % self.num_devices for i in range(count)]
-            self._cursor = (self._cursor + count) % self.num_devices
-        if exclusive:
-            taken = self.occupancy()
             for i in ids:
-                if taken.get(i):
-                    raise ValueError(f"device {i} already exclusively held")
+                msg = _reject(i)
+                if msg:
+                    raise ValueError(msg)
+        else:
+            ids = []
+            for off in range(self.num_devices):
+                i = (self._cursor + off) % self.num_devices
+                if _reject(i) is None:
+                    ids.append(i)
+                    if len(ids) == count:
+                        break
+            if len(ids) < count:
+                raise ValueError(
+                    f"cannot allocate {count} device(s) for '{owner}': "
+                    f"only {len(ids)} eligible")
+            self._cursor = (ids[-1] + 1) % self.num_devices
+        if exclusive:
+            for i in ids:
+                self._exclusive[i] = owner
         self._allocations.setdefault(owner, []).extend(ids)
         return ids
 
     def free(self, owner: str) -> None:
         self._allocations.pop(owner, None)
+        self._exclusive = {i: o for i, o in self._exclusive.items()
+                           if o != owner}
 
     def occupancy(self) -> Dict[int, List[str]]:
         occ: Dict[int, List[str]] = {}

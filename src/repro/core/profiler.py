@@ -91,6 +91,40 @@ class Profiler:
         return CostModel(name=name, base_time=base, slope_time=slope, **kw)
 
 
+def fit_tail_factor(service_times: Sequence[float]) -> float:
+    """Measured long-tail multiplier from per-request completion times.
+
+    A static-batched stage lasts as long as its slowest request while
+    useful throughput tracks the mean, so the stall multiplier is
+    ``max / mean`` (same definition as
+    ``benchmarks.common.tail_factor_from_lengths``, but measured from an
+    engine's request log instead of assumed from a length model).
+    """
+    arr = np.asarray(list(service_times), dtype=np.float64)
+    arr = arr[arr > 0]
+    if arr.size == 0 or arr.mean() <= 0:
+        return 1.0
+    return float(arr.max() / arr.mean())
+
+
+def engine_cost_model(name: str,
+                      records: Sequence[Tuple[int, float]],
+                      **kw) -> CostModel:
+    """Fit a CostModel from a serving engine's per-request records.
+
+    ``records``: (tokens_generated, service_seconds) per completed
+    request, e.g. ``PagedEngine.pop_request_records()``.  base/slope
+    come from the tokens-vs-time fit; ``tail_factor`` is *measured* from
+    the completion-time spread rather than assumed.
+    """
+    recs = [(int(n), float(t)) for n, t in records if t > 0]
+    if not recs:
+        return CostModel(name=name, **kw)
+    cm = Profiler.fit(name, recs, **kw)
+    cm.tail_factor = fit_tail_factor([t for _, t in recs])
+    return cm
+
+
 def measure_onoffload(worker) -> Tuple[float, float]:
     """Time a real offload/onload round-trip of a worker's state."""
     t0 = time.perf_counter()

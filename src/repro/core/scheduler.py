@@ -135,6 +135,10 @@ class SchedulerConfig:
     # candidate device splits are multiples of this quantum (e.g. a node
     # of 8 GPUs); 1 = any split
     device_quantum: int = 1
+    # pipeline chunk sizes must be multiples of this — the data atomicity
+    # unit (e.g. a GRPO group: group-relative advantages are undefined if
+    # a chunk boundary splits a group); 1 = any chunk size
+    chunk_multiple: int = 1
     # memory capacity per device (bytes); 0 disables feasibility checks
     device_memory: float = 0.0
     # --- async off-policy dimension (cross-iteration overlap) ---
@@ -325,7 +329,8 @@ class Scheduler:
     def _granularities(self, batch: int) -> List[int]:
         out = []
         for d in self.cfg.granularity_divisors:
-            if batch % d == 0 and batch // d >= 1:
+            if batch % d == 0 and batch // d >= 1 \
+                    and (batch // d) % self.cfg.chunk_multiple == 0:
                 out.append(batch // d)
         return sorted(set(out))
 

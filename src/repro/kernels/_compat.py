@@ -1,0 +1,16 @@
+"""Pallas-TPU API compatibility shared by the kernel modules."""
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _resolve_compiler_params():
+    # jax renamed TPUCompilerParams -> CompilerParams; support both pins
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; unsupported jax version")
+
+
+CompilerParams = _resolve_compiler_params()

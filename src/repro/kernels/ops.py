@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import moe_gmm as _gmm
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ssd_scan as _ssd
 
 # interpret=True whenever we're not actually on TPU
@@ -36,6 +37,14 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         qt, kt, vt, causal=causal, window=window, block_q=block_q,
         block_k=block_k, interpret=_interpret())
     return out.transpose(0, 2, 1, 3)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, context_lens):
+    """Decode-time paged attention: q (B, H, D) over a (P, page, KV, D)
+    page pool addressed through per-request block tables."""
+    return _pa.paged_attention_bhd(
+        q, k_pages, v_pages, block_tables, context_lens,
+        interpret=_interpret())
 
 
 def ssd_scan(x, dt, A, Bm, Cm, D, chunk: int):

@@ -65,3 +65,33 @@ def grouped_matmul_ref(buf, w):
     return jnp.einsum(
         "ecd,edf->ecf", buf.astype(jnp.float32), w.astype(jnp.float32)
     ).astype(buf.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens):
+    """Single-token decode attention over a paged KV cache.
+
+    q            (B, H, D)       one query token per sequence
+    k_pages      (P, page, KV, D) page pool (page 0 = trash page)
+    v_pages      (P, page, KV, D)
+    block_tables (B, nb) int32   per-request page ids (trash-padded)
+    context_lens (B,)    int32   valid tokens per request
+    -> (B, H, D)
+    """
+    B, H, D = q.shape
+    P, page, KV, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    G = H // KV
+    # gather the logical (B, nb*page, KV, D) K/V views through the tables
+    k = k_pages[block_tables].reshape(B, nb * page, KV, D)
+    v = v_pages[block_tables].reshape(B, nb * page, KV, D)
+    kf = jnp.repeat(k.astype(jnp.float32), G, axis=2)  # (B, S, H, D)
+    vf = jnp.repeat(v.astype(jnp.float32), G, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kf)
+    s = s / jnp.sqrt(jnp.float32(D))
+    pos = jnp.arange(nb * page)[None, :]  # logical position per slot
+    ok = pos < context_lens[:, None]
+    s = jnp.where(ok[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # empty context (context_len == 0): zeros, not a softmax over the mask
+    p = jnp.where((context_lens > 0)[:, None, None], p, 0.0)
+    return jnp.einsum("bhs,bshd->bhd", p, vf).astype(q.dtype)

@@ -33,7 +33,7 @@ from repro.core import (
     Profiler,
     SchedulerConfig,
 )
-from repro.core.profiler import CostModel, measure_onoffload
+from repro.core.profiler import CostModel, fit_tail_factor, measure_onoffload
 from repro.rl.workers import (
     ActorWorker,
     InferenceWorker,
@@ -96,6 +96,9 @@ class GRPORunner:
         self.rl = rl
         self.cluster = cluster or Cluster(num_nodes=1, devices_per_node=8)
         hp = hp or TrainHParams()
+        assert rl.batch_size % rl.group_size == 0, (
+            f"batch_size={rl.batch_size} must be a multiple of "
+            f"group_size={rl.group_size} (whole GRPO groups)")
         n_queries = rl.batch_size // rl.group_size
         self.data = PromptDataset(n_queries, prompt_len=rl.prompt_len,
                                   seed=rl.seed)
@@ -174,6 +177,13 @@ class GRPORunner:
                 on, off = measure_onoffload(w)
                 cm.onload_time, cm.offload_time = on, off
             cm.base_mem = float(w.state_bytes())
+            if name == "rollout" and hasattr(w, "request_records"):
+                # engine-backed tail: fit the long-tail multiplier from
+                # measured per-request completion times (continuous
+                # engine) instead of assuming the Fig. 2 length model
+                recs = w.request_records()
+                if recs:
+                    cm.tail_factor = fit_tail_factor(t for _, t in recs)
             profiles[name] = cm
         self.controller.profiles = profiles
         self.graph = graph
@@ -185,6 +195,10 @@ class GRPORunner:
             total_batch=self.rl.batch_size,
             granularity_divisors=(1, 2, 4),
             device_quantum=2,
+            # never pipeline below a GRPO group: a chunk that splits a
+            # group degrades grpo_advantages to per-sequence groups of 1
+            # (identically zero advantage — no learning signal)
+            chunk_multiple=self.rl.group_size,
         )
         if self.rl.async_depth > 0:
             # Horizon plan with the configured staleness bound.  NOTE:
@@ -249,7 +263,10 @@ class GRPORunner:
 
         def sync(_gate_version: int) -> int:
             version, params = self._published
-            self.rollout.update_weights(params)
+            # the paged engine applies this in flight at its next step
+            # boundary; the version tag rides along so per-request
+            # weight_versions in the rollout output match the queue tag
+            self.rollout.update_weights(params, version=version)
             self.inference.update_weights(params)
             return version  # tag = the version actually pulled
 

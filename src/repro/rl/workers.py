@@ -8,19 +8,20 @@ elastic pipelining relies on (§3.3).
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import DENSE, ModelConfig
 from repro.core.worker import Worker
 from repro.models import init_model
 from repro.rl.advantage import broadcast_to_tokens, grpo_advantages
 from repro.rl.env import EnvConfig, VecReachEnv
 from repro.rl.reward import math_reward
-from repro.serve.engine import Engine
+from repro.serve.engine import Engine, PagedEngine
 from repro.train.optimizer import init_adamw
 from repro.train.trainer import (
     TrainHParams,
@@ -30,22 +31,50 @@ from repro.train.trainer import (
 
 
 class RolloutWorker(Worker):
-    """Generation engine (the paper's SGLang/vLLM role)."""
+    """Generation engine (the paper's SGLang/vLLM role).
+
+    ``engine="paged"`` (the default for dense stacks) generates through
+    the continuous-batching :class:`~repro.serve.engine.PagedEngine`:
+    requests join/leave the decode batch per step, KV lives in paged
+    blocks, and trainer weight updates apply in flight with per-request
+    version tags.  ``engine="static"`` keeps the legacy fixed-shape
+    ``lax.scan`` engine (and is the fallback for non-dense or windowed
+    architectures the paged cache does not cover yet).
+    """
 
     def __init__(self, name: str, *, cfg: ModelConfig,
                  max_new_tokens: int = 16, temperature: float = 1.0,
+                 top_k: int = 0, top_p: float = 1.0,
                  seed: int = 0, devices: Sequence[int] = (),
-                 process_index: int = 0):
+                 process_index: int = 0, engine: str = "auto",
+                 max_batch: int = 8, page_size: int = 16):
         super().__init__(name, devices=devices, process_index=process_index)
         self.cfg = cfg
-        self.engine = Engine(cfg, max_new_tokens=max_new_tokens,
-                             temperature=temperature)
+        if engine == "auto":
+            engine = ("paged" if cfg.kind == DENSE
+                      and not cfg.sliding_window else "static")
+        assert engine in ("paged", "static"), engine
+        self.engine_kind = engine
+        if engine == "paged":
+            self.engine = PagedEngine(
+                cfg, max_batch=max_batch, page_size=page_size,
+                max_new_tokens=max_new_tokens, temperature=temperature,
+                top_k=top_k, top_p=top_p)
+        else:
+            self.engine = Engine(cfg, max_new_tokens=max_new_tokens,
+                                 temperature=temperature, top_k=top_k,
+                                 top_p=top_p)
         self.key = jax.random.PRNGKey(seed + process_index)
         self.register_state("params", None)
 
-    # weight sync barrier (paper §2.1): trainer -> rollout
-    def update_weights(self, params: Any) -> None:
+    # weight sync (paper §2.1): trainer -> rollout.  On the paged engine
+    # this is NOT a barrier — the update is enqueued and applied at the
+    # next step boundary while requests stay in flight.
+    def update_weights(self, params: Any,
+                       version: Optional[int] = None) -> None:
         self.set_state("params", params)
+        if isinstance(self.engine, PagedEngine):
+            self.engine.update_weights(params, version)
 
     def generate(self, chunk: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
         params = self.get_state("params")
@@ -57,7 +86,16 @@ class RolloutWorker(Worker):
         out["tokens"] = np.asarray(res.tokens)
         out["logprobs"] = np.asarray(res.logprobs)
         out["lengths"] = np.asarray(res.lengths)
+        if res.weight_versions is not None:
+            out["weight_versions"] = np.asarray(res.weight_versions)
         return out
+
+    def request_records(self):
+        """(tokens, service_time) per completed request since last call
+        (paged engine only) — feeds the profiler's measured tail factor."""
+        if isinstance(self.engine, PagedEngine):
+            return self.engine.pop_request_records()
+        return []
 
 
 class InferenceWorker(Worker):
@@ -144,6 +182,13 @@ class RewardWorker(Worker):
         mask = np.zeros((B, S), np.float32)
         mask[:, self.prompt_len:] = (toks[:, self.prompt_len:] != 0)
         gs = min(self.group_size, B) if B % max(self.group_size, 1) == 0 else 1
+        if gs == 1 and self.group_size > 1:
+            warnings.warn(
+                f"reward chunk of {B} rows is not a multiple of "
+                f"group_size={self.group_size}; group-relative advantages "
+                "degrade to 0 (no learning signal). Align the execution "
+                "plan's chunk size (SchedulerConfig.chunk_multiple).",
+                stacklevel=2)
         adv_seq = grpo_advantages(rewards, gs)
         out = dict(chunk)
         out["rewards"] = rewards

@@ -1,1 +1,20 @@
-from repro.serve.engine import Engine, GenerationResult  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    Engine,
+    GenerationResult,
+    PagedEngine,
+)
+from repro.serve.paging import (  # noqa: F401
+    OutOfPages,
+    PageAllocator,
+    PagedKVCache,
+    init_paged_cache,
+)
+from repro.serve.sampling import (  # noqa: F401
+    sample_token,
+    top_k_logits,
+    top_p_logits,
+)
+from repro.serve.scheduler import (  # noqa: F401
+    ContinuousScheduler,
+    Request,
+)

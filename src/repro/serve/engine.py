@@ -1,22 +1,54 @@
-"""Rollout/serving engine: batched prefill + autoregressive decode.
+"""Rollout/serving engines: static batch (legacy) and paged continuous.
 
-This is the "rollout worker" compute used by the M2Flow runtime (the
-paper's SGLang/vLLM role).  Generation runs under ``lax.scan`` with a
-per-sequence `done` mask, and returns per-token *behaviour logprobs* so
-the trainer can form importance ratios without a separate inference pass
-when the collocated mode is chosen (one-forward-pass trick, §5.3).
+Two engines implement the "rollout worker" compute of the M2Flow runtime
+(the paper's SGLang/vLLM role):
+
+* :class:`Engine` — the original fixed-shape engine: one ``lax.scan``
+  over ``max_new_tokens`` with a per-sequence `done` mask.  Every request
+  is padded to the longest response, so devices idle behind the long
+  tail (paper Fig. 2).
+* :class:`PagedEngine` — continuous batching over a paged KV cache: the
+  decode batch is re-formed every step (finished requests immediately
+  free their pages, queued prompts backfill), attention reads the cache
+  through per-request block tables (optionally via the Pallas
+  paged-attention kernel), and trainer weight updates apply *in flight*
+  at step boundaries with per-request version tags preserved for the
+  staleness correction.
+
+Both return per-token *behaviour logprobs* so the trainer can form
+importance ratios without a separate inference pass when the collocated
+mode is chosen (one-forward-pass trick, §5.3).
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+import threading
+from collections import deque
+from typing import Any, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import DENSE, ModelConfig
 from repro.models import model as M
-from repro.models.layers import token_logprobs
+from repro.models.attention import NEG_INF, qkv_project, sdpa
+from repro.models.layers import (
+    apply_rope,
+    embed,
+    mlp,
+    rmsnorm,
+    unembed,
+)
+from repro.serve.paging import (
+    OutOfPages,
+    PageAllocator,
+    PagedKVCache,
+    init_paged_cache,
+    pad_block_table,
+)
+from repro.serve.sampling import sample_token
+from repro.serve.scheduler import RUNNING, ContinuousScheduler, Request
 
 
 class GenerationResult(NamedTuple):
@@ -24,32 +56,31 @@ class GenerationResult(NamedTuple):
     logprobs: jax.Array  # (B, S_total) behaviour logprob per token (0 on prompt)
     lengths: jax.Array  # (B,) total valid length
     done: jax.Array  # (B,) bool — hit EOS before max tokens
+    # weight version each request was admitted under (all zeros on the
+    # legacy engine; the paged engine tags every request so the staleness
+    # correction can reference the actual behaviour-policy version)
+    weight_versions: Optional[np.ndarray] = None
 
 
-def _sample(key, logits: jax.Array, temperature: float, vocab_size: int):
+def _sample(key, logits: jax.Array, temperature: float, vocab_size: int,
+            top_k: int = 0, top_p: float = 1.0):
     """Categorical sample with padded-vocab masking; temp<=0 = greedy."""
-    logits = logits.astype(jnp.float32)
-    neg = jnp.full_like(logits, -1e30)
-    V = logits.shape[-1]
-    mask = jnp.arange(V) < vocab_size
-    logits = jnp.where(mask, logits, neg)
-    if temperature <= 0.0:
-        tok = jnp.argmax(logits, axis=-1)
-    else:
-        tok = jax.random.categorical(key, logits / temperature, axis=-1)
-    lp = token_logprobs(logits, tok)
-    return tok.astype(jnp.int32), lp
+    return sample_token(key, logits, temperature=temperature, top_k=top_k,
+                        top_p=top_p, vocab_size=vocab_size)
 
 
 class Engine:
     """Owns jitted prefill/decode functions for one model config."""
 
     def __init__(self, cfg: ModelConfig, *, max_new_tokens: int = 32,
-                 temperature: float = 1.0, eos_token: int = 2,
+                 temperature: float = 1.0, top_k: int = 0,
+                 top_p: float = 1.0, eos_token: int = 2,
                  pad_token: int = 0):
         self.cfg = cfg
         self.max_new_tokens = max_new_tokens
         self.temperature = temperature
+        self.top_k = top_k
+        self.top_p = top_p
         self.eos = eos_token
         self.pad = pad_token
         self._generate = jax.jit(self._generate_impl, static_argnames=("B", "S"))
@@ -73,7 +104,8 @@ class Engine:
         def step(carry, i):
             state, last, toks, lps, done, key = carry
             key, sub = jax.random.split(key)
-            tok, lp = _sample(sub, last, self.temperature, cfg.vocab_size)
+            tok, lp = _sample(sub, last, self.temperature, cfg.vocab_size,
+                              top_k=self.top_k, top_p=self.top_p)
             tok = jnp.where(done, self.pad, tok)
             lp = jnp.where(done, 0.0, lp)
             pos = S + i
@@ -101,3 +133,336 @@ class Engine:
         if prompt_lens is None:
             prompt_lens = jnp.full((B,), S, jnp.int32)
         return self._generate(params, prompt_tokens, prompt_lens, key, B=B, S=S)
+
+
+# ===========================================================================
+# Continuous-batching engine over a paged KV cache
+# ===========================================================================
+def _paged_sdpa(q, k_pages, v_pages, block_tables, context_lens):
+    """Pure-JAX paged attention (gather through the block table + sdpa);
+    the XLA analogue of kernels/paged_attention.py, exact same math."""
+    B = q.shape[0]
+    _, page, KV, hd = k_pages.shape
+    nb = block_tables.shape[1]
+    k = k_pages[block_tables].reshape(B, nb * page, KV, hd)
+    v = v_pages[block_tables].reshape(B, nb * page, KV, hd)
+    pos = jnp.arange(nb * page)
+    mask = jnp.where(pos[None, :] < context_lens[:, None], 0.0,
+                     NEG_INF)[:, None, None, :]  # (B, 1, 1, S)
+    return sdpa(q, k, v, mask)  # (B, 1, H, hd)
+
+
+class PagedEngine:
+    """Continuous-batching rollout engine with a paged KV cache.
+
+    The engine advances *all* active requests by one token per
+    :meth:`step` — mixed prefill/decode (Orca-style iteration-level
+    scheduling): a request still consuming its prompt is teacher-forced,
+    one past it feeds back its sampled token.  The jitted step runs over
+    ``max_batch`` fixed slots (inactive slots write to the reserved trash
+    page and are ignored on the host), so one compilation serves every
+    batch composition the scheduler produces.
+
+    Weight sync: :meth:`update_weights` enqueues a versioned update that
+    is applied at the next step boundary *without draining the engine* —
+    running requests keep their pages and simply continue under the new
+    weights; each request records the version it was admitted under
+    (``weight_version``, what the staleness correction references) and
+    the newest version that produced any of its tokens
+    (``last_weight_version``).
+
+    Sampling is per-request deterministic: token ``i`` of request ``r``
+    is drawn from ``fold_in(PRNGKey(r.seed), position)``, so results do
+    not depend on how requests were batched together.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, max_batch: int = 8,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 max_seq_len: Optional[int] = None,
+                 max_new_tokens: int = 32, temperature: float = 1.0,
+                 top_k: int = 0, top_p: float = 1.0, eos_token: int = 2,
+                 pad_token: int = 0, use_kernel: bool = False,
+                 dtype=jnp.float32):
+        if cfg.kind != DENSE:
+            raise NotImplementedError(
+                f"PagedEngine supports dense decoder stacks, got {cfg.kind}")
+        if cfg.sliding_window:
+            raise NotImplementedError(
+                "PagedEngine does not window the paged cache yet")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.page_size = page_size
+        self.max_seq_len = max_seq_len or cfg.max_seq_len
+        self.max_new_tokens = max_new_tokens
+        self.temperature = temperature
+        self.top_k = top_k
+        self.top_p = top_p
+        self.eos = eos_token
+        self.pad = pad_token
+        self.use_kernel = use_kernel
+        self.max_blocks = -(-self.max_seq_len // page_size)
+        # default pool: every slot can hold a full sequence (+ trash page)
+        if num_pages is None:
+            num_pages = max_batch * self.max_blocks + 1
+        # the pool must at least hold ONE full sequence, or the oldest
+        # request could never finish even with everyone else preempted
+        assert num_pages - 1 >= self.max_blocks, (num_pages, self.max_blocks)
+        self.allocator = PageAllocator(num_pages=num_pages,
+                                       page_size=page_size)
+        self.scheduler = ContinuousScheduler(
+            max_batch=max_batch, allocator=self.allocator,
+            max_seq_len=self.max_seq_len)
+        self.cache: PagedKVCache = init_paged_cache(
+            cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
+            cfg.resolved_head_dim, dtype)
+        # -- weights + in-flight sync --------------------------------------
+        self.params: Any = None
+        self.weight_version: int = 0
+        self._pending: deque = deque()  # (version, params), newest wins
+        self._sync_lock = threading.Lock()
+        self.weight_swaps = 0
+        # -- bookkeeping ----------------------------------------------------
+        # bounded: records feed the profiler's tail fit; without a
+        # consumer the log must not grow for the life of the worker
+        self.finished_log: deque = deque(maxlen=4096)
+        self.decode_steps = 0
+        # donate the page pools: XLA aliases input to output so the
+        # per-step .at[].set() updates the cache in place instead of
+        # copying the whole pool every token
+        self._step_fn = jax.jit(self._step_impl, donate_argnums=(1, 2))
+
+    # ------------------------------------------------------------------
+    # weights
+    # ------------------------------------------------------------------
+    def set_params(self, params: Any, version: Optional[int] = None) -> None:
+        """Apply immediately (initial load / synchronous callers)."""
+        self.params = params
+        if version is not None:
+            self.weight_version = version
+
+    def update_weights(self, params: Any,
+                       version: Optional[int] = None) -> None:
+        """Enqueue an in-flight update; applied at the next step boundary.
+        Thread-safe — the trainer may call this while the engine loop is
+        mid-generation."""
+        with self._sync_lock:
+            if version is None:
+                # auto-version past any still-pending update, or two
+                # back-to-back enqueues would share one tag for
+                # different parameter sets
+                base = self._pending[-1][0] if self._pending \
+                    else self.weight_version
+                version = base + 1
+            self._pending.append((version, params))
+
+    def _apply_pending(self) -> None:
+        # params/weight_version are written under the lock: update_weights
+        # reads weight_version to auto-assign the next version, so an
+        # unlocked write could hand the same tag to two parameter sets
+        with self._sync_lock:
+            if not self._pending:
+                return
+            version, params = self._pending[-1]  # newest update wins
+            skipped = len(self._pending) - 1
+            self._pending.clear()
+            self.params = params
+            self.weight_version = version
+            self.weight_swaps += 1 + skipped
+
+    # ------------------------------------------------------------------
+    # request lifecycle
+    # ------------------------------------------------------------------
+    def submit(self, prompt: Sequence[int], *,
+               max_new_tokens: Optional[int] = None,
+               seed: int = 0) -> Request:
+        return self.scheduler.submit(
+            list(int(t) for t in prompt),
+            max_new_tokens if max_new_tokens is not None
+            else self.max_new_tokens,
+            seed=seed, weight_version=self.weight_version)
+
+    # ------------------------------------------------------------------
+    # the jitted fixed-shape step
+    # ------------------------------------------------------------------
+    def _step_impl(self, params, k_pages, v_pages, tokens, positions,
+                   block_tables, seeds):
+        """One token for every slot.  All shapes fixed by construction:
+        tokens/positions/seeds (max_batch,), block_tables
+        (max_batch, max_blocks), cache (L, P, page, KV, hd)."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens[:, None])  # (B, 1, d)
+        posb = positions[:, None]
+        page = self.page_size
+        page_idx = jnp.take_along_axis(
+            block_tables, (positions // page)[:, None], axis=1)[:, 0]
+        offset = positions % page
+        ctx = positions + 1  # valid tokens after this step's write
+
+        def layer_body(carry, xs):
+            x = carry
+            lp, kl, vl = xs  # kl/vl: (P, page, KV, hd)
+            h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            q, k, v = qkv_project(lp["attn"], cfg, h)  # (B, 1, H|KV, hd)
+            q = apply_rope(q, posb, cfg.rope_theta)
+            k = apply_rope(k, posb, cfg.rope_theta)
+            # scatter this step's K/V into each request's current page
+            # (inactive slots target the trash page)
+            kl = kl.at[page_idx, offset].set(k[:, 0].astype(kl.dtype))
+            vl = vl.at[page_idx, offset].set(v[:, 0].astype(vl.dtype))
+            if self.use_kernel:
+                from repro.kernels import ops as kops
+
+                out = kops.paged_attention(
+                    q[:, 0], kl, vl, block_tables, ctx)[:, None]
+            else:
+                out = _paged_sdpa(q, kl, vl, block_tables, ctx)
+            x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
+            x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+            return x, (kl, vl)
+
+        x, (k_pages, v_pages) = jax.lax.scan(
+            layer_body, x, (params["layers"], k_pages, v_pages))
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], x)[:, 0]  # (B, V)
+
+        keys = jax.vmap(
+            lambda s, p: jax.random.fold_in(jax.random.PRNGKey(s), p)
+        )(seeds, positions)
+        tok, lp = jax.vmap(functools.partial(
+            sample_token, temperature=self.temperature, top_k=self.top_k,
+            top_p=self.top_p, vocab_size=cfg.vocab_size))(keys, logits)
+        return tok, lp, k_pages, v_pages
+
+    # ------------------------------------------------------------------
+    # host-side engine loop
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Admit, advance every active request one token, join/evict.
+        Returns the number of requests advanced."""
+        self._apply_pending()  # before the check: update_weights() alone
+        # is a valid way to deliver the initial weights
+        assert self.params is not None, "engine weights not initialized"
+        self.scheduler.admit(weight_version=self.weight_version)
+        self._grow_pages_or_preempt()
+        reqs = self.scheduler.active_requests()
+        if not reqs:
+            return 0
+        B = self.max_batch
+        tokens = np.zeros((B,), np.int32)
+        positions = np.zeros((B,), np.int32)
+        tables = np.zeros((B, self.max_blocks), np.int32)  # trash page
+        seeds = np.zeros((B,), np.int32)
+        for r in reqs:
+            pos = r.num_cached
+            if pos < r.prompt_len:
+                tokens[r.slot] = r.prompt[pos]
+            else:
+                tokens[r.slot] = r.generated[pos - r.prompt_len]
+            positions[r.slot] = pos
+            tables[r.slot] = pad_block_table(r.pages, self.max_blocks)
+            seeds[r.slot] = r.seed
+        tok, lp, kc, vc = self._step_fn(
+            self.params, self.cache.k, self.cache.v, jnp.asarray(tokens),
+            jnp.asarray(positions), jnp.asarray(tables), jnp.asarray(seeds))
+        self.cache = PagedKVCache(k=kc, v=vc)
+        tok_np, lp_np = np.asarray(tok), np.asarray(lp)
+        for r in reqs:
+            pos = r.num_cached
+            r.num_cached += 1
+            r.last_weight_version = self.weight_version
+            # sample only at the frontier: during prompt prefill AND during
+            # post-preemption replay of already-generated tokens the step
+            # is teacher-forced and its sampled token is discarded
+            if pos == r.total_len - 1 and pos >= r.prompt_len - 1:
+                t = int(tok_np[r.slot])
+                r.generated.append(t)
+                r.logprobs.append(float(lp_np[r.slot]))
+                if t == self.eos or len(r.generated) >= r.max_new_tokens:
+                    r.hit_eos = t == self.eos
+                    self.scheduler.finish(r)
+        self.decode_steps += 1
+        self.scheduler.stats.steps += 1
+        return len(reqs)
+
+    def _grow_pages_or_preempt(self) -> None:
+        """Back every active request's next slot with a page.  When the
+        pool runs dry, preempt the YOUNGEST active request (freeing all
+        its pages; it re-queues at the head and recomputes on resume) so
+        the oldest requests always make progress — admission guarantees
+        a lone request fits, so this cannot livelock."""
+        for r in sorted(self.scheduler.active_requests(),
+                        key=lambda r: r.rid):
+            if r.state != RUNNING:  # preempted earlier in this loop
+                continue
+            while True:
+                try:
+                    self.scheduler.ensure_page_for(r)
+                    break
+                except OutOfPages:
+                    victims = [v for v in self.scheduler.active_requests()
+                               if v.rid > r.rid]
+                    victim = max(victims, key=lambda v: v.rid) if victims \
+                        else r  # r itself is youngest: it yields
+                    self.scheduler.preempt(victim)
+                    if victim is r:
+                        break
+
+    def run(self) -> List[Request]:
+        """Drive until the queue and the running set are both empty."""
+        while self.scheduler.has_work:
+            self.step()
+        done, self.scheduler.finished = self.scheduler.finished, []
+        self.finished_log.extend(done)
+        return done
+
+    # ------------------------------------------------------------------
+    # batch-compatible front end (drop-in for Engine.generate)
+    # ------------------------------------------------------------------
+    def generate(self, params, prompt_tokens, prompt_lens=None,
+                 key=None) -> GenerationResult:
+        """prompt_tokens: (B, S) int32; returns the legacy layout padded
+        to ``S + max_new_tokens`` so downstream RL code is unchanged."""
+        if params is not None:
+            self.set_params(params, self.weight_version)
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        base_seed = int(jax.random.randint(key, (), 0, 2**31 - 1))
+        prompts = np.asarray(prompt_tokens)
+        B, S = prompts.shape
+        # mask keeps base_seed + i inside int32 (the jitted step's seeds)
+        reqs = [self.submit(prompts[i], seed=(base_seed + i) & 0x7FFFFFFF)
+                for i in range(B)]
+        self.run()
+        return self._collect(reqs, S)
+
+    def _collect(self, reqs: List[Request], S: int) -> GenerationResult:
+        B = len(reqs)
+        total = S + self.max_new_tokens
+        tokens = np.full((B, total), self.pad, np.int32)
+        logprobs = np.zeros((B, total), np.float32)
+        lengths = np.zeros((B,), np.int32)
+        done = np.zeros((B,), bool)
+        versions = np.zeros((B,), np.int32)
+        for i, r in enumerate(reqs):
+            tokens[i, :S] = r.prompt
+            n = len(r.generated)
+            tokens[i, S:S + n] = r.generated
+            logprobs[i, S:S + n] = r.logprobs
+            lengths[i] = S + n
+            done[i] = r.hit_eos
+            versions[i] = r.weight_version
+        return GenerationResult(
+            tokens=jnp.asarray(tokens), logprobs=jnp.asarray(logprobs),
+            lengths=jnp.asarray(lengths), done=jnp.asarray(done),
+            weight_versions=versions)
+
+    # ------------------------------------------------------------------
+    # measurement (feeds the profiler's fitted tail factor)
+    # ------------------------------------------------------------------
+    def pop_request_records(self) -> List[Tuple[int, float]]:
+        """(generated_tokens, service_seconds) per finished request;
+        clears the log."""
+        recs = [(len(r.generated), r.service_time())
+                for r in self.finished_log]
+        self.finished_log.clear()
+        return recs

@@ -1,0 +1,117 @@
+"""Paged KV-cache: fixed-size blocks, per-request block tables, free-list.
+
+The production insight (vLLM's PagedAttention, HybridFlow's rollout tier)
+is that a generation engine should never reserve ``max_seq_len`` of
+contiguous KV memory per request: response lengths are long-tailed
+(paper Fig. 2), so contiguous allocation strands most of the cache behind
+the few longest responses.  Instead the cache is a pool of fixed-size
+*pages*; each request owns a *block table* (list of page ids) that grows
+one page at a time and is returned to the free list the moment the
+request finishes — which is what lets a continuous-batching scheduler
+backfill new prompts mid-stage.
+
+Two layers live here:
+
+* :class:`PageAllocator` — host-side free-list bookkeeping (pure Python,
+  runs in the scheduler loop; never traced).
+* :class:`PagedKVCache` — the device-side page pool, one K and one V
+  array of shape ``(layers, num_pages, page_size, kv_heads, head_dim)``.
+  Page 0 is reserved as a *trash page*: inactive decode slots point their
+  block tables at it so the fixed-shape jitted step can scatter
+  unconditionally without corrupting live requests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# page id 0 is never handed out: it absorbs writes from inactive slots
+TRASH_PAGE = 0
+
+
+class OutOfPages(Exception):
+    """The free list is exhausted — the scheduler must stop admitting."""
+
+
+@dataclass
+class PageAllocator:
+    """Free-list allocator over ``num_pages`` fixed-size pages.
+
+    Page ids are ints in ``[1, num_pages)`` (0 is the trash page).  The
+    free list is LIFO so recently-freed (cache-warm) pages are reused
+    first.
+    """
+
+    num_pages: int
+    page_size: int
+    _free: List[int] = field(default_factory=list)
+    _allocated: int = 0
+
+    def __post_init__(self):
+        assert self.num_pages >= 2, "need >= 1 usable page + trash page"
+        assert self.page_size >= 1
+        self._free = list(range(self.num_pages - 1, TRASH_PAGE, -1))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_allocated(self) -> int:
+        return self._allocated
+
+    def pages_needed(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.page_size)  # ceil
+
+    def can_allocate(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def allocate(self, n: int = 1) -> List[int]:
+        if n > len(self._free):
+            raise OutOfPages(f"want {n} pages, {len(self._free)} free")
+        out = [self._free.pop() for _ in range(n)]
+        self._allocated += n
+        return out
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            assert p != TRASH_PAGE and 0 < p < self.num_pages, p
+            assert p not in self._free, f"double free of page {p}"
+            self._free.append(p)
+        self._allocated -= len(pages)
+        assert self._allocated >= 0
+
+
+class PagedKVCache(NamedTuple):
+    """Device-side page pool shared by every request on the engine.
+
+    k/v: (num_layers, num_pages, page_size, kv_heads, head_dim)
+    """
+
+    k: jax.Array
+    v: jax.Array
+
+    @property
+    def num_pages(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[2]
+
+
+def init_paged_cache(num_layers: int, num_pages: int, page_size: int,
+                     kv_heads: int, head_dim: int,
+                     dtype=jnp.float32) -> PagedKVCache:
+    shape = (num_layers, num_pages, page_size, kv_heads, head_dim)
+    return PagedKVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def pad_block_table(pages: List[int], max_blocks: int) -> List[int]:
+    """Fixed-width row for the jitted step; padding points at the trash
+    page (reads there are masked by the context length)."""
+    assert len(pages) <= max_blocks, (len(pages), max_blocks)
+    return pages + [TRASH_PAGE] * (max_blocks - len(pages))

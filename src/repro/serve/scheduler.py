@@ -1,0 +1,193 @@
+"""Continuous-batching scheduler: admission queue + per-step join/evict.
+
+Iteration-level scheduling (Orca/vLLM): the decode batch is re-formed at
+*every* step.  A finished request frees its pages and its slot
+immediately; the head of the admission queue joins as soon as a slot and
+enough pages for its prompt (+ one decode page) are available.  This is
+the mechanism that removes the long-tail stall of static batching
+(paper Fig. 2): devices never idle behind the slowest response as long
+as the queue is non-empty.
+
+The scheduler is pure host-side bookkeeping — the engine owns the jitted
+compute and asks the scheduler which requests occupy which slots.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+from repro.serve.paging import PageAllocator
+
+QUEUED = "queued"
+RUNNING = "running"
+FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    """One generation request moving through the engine."""
+
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    seed: int = 0
+    # -- lifecycle --------------------------------------------------------
+    state: str = QUEUED
+    slot: int = -1
+    pages: List[int] = field(default_factory=list)
+    # number of tokens already written into the KV cache (prompt progress
+    # during chunk-less prefill, then prompt + generated during decode)
+    num_cached: int = 0
+    generated: List[int] = field(default_factory=list)
+    logprobs: List[float] = field(default_factory=list)
+    hit_eos: bool = False
+    # weight version the request was admitted under, and the newest
+    # version that produced any of its tokens (in-flight sync may advance
+    # it; the staleness correction uses the conservative admitted tag)
+    weight_version: int = 0
+    last_weight_version: int = 0
+    # -- timing (feeds the profiler's measured tail_factor) ---------------
+    submit_time: float = 0.0
+    start_time: float = 0.0
+    finish_time: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + len(self.generated)
+
+    @property
+    def in_prefill(self) -> bool:
+        return self.num_cached < self.prompt_len
+
+    def service_time(self) -> float:
+        return self.finish_time - self.start_time
+
+
+@dataclass
+class SchedulerStats:
+    admitted: int = 0
+    finished: int = 0
+    evicted_pages: int = 0
+    peak_active: int = 0
+    steps: int = 0
+    preempted: int = 0
+
+
+class ContinuousScheduler:
+    """Admission queue + running set over ``max_batch`` decode slots."""
+
+    def __init__(self, *, max_batch: int, allocator: PageAllocator,
+                 max_seq_len: int):
+        self.max_batch = max_batch
+        self.allocator = allocator
+        self.max_seq_len = max_seq_len
+        self.waiting: Deque[Request] = deque()
+        self.running: Dict[int, Request] = {}  # slot -> request
+        self._free_slots: List[int] = list(range(max_batch - 1, -1, -1))
+        self._rid = itertools.count()
+        self.stats = SchedulerStats()
+        self.finished: List[Request] = []
+
+    # -- submission --------------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int,
+               *, seed: int = 0, weight_version: int = 0) -> Request:
+        assert len(prompt) >= 1, "empty prompt: nothing to condition on"
+        assert len(prompt) + max_new_tokens <= self.max_seq_len, (
+            len(prompt), max_new_tokens, self.max_seq_len)
+        req = Request(rid=next(self._rid), prompt=list(prompt),
+                      max_new_tokens=max_new_tokens, seed=seed,
+                      weight_version=weight_version,
+                      last_weight_version=weight_version,
+                      submit_time=time.perf_counter())
+        self.waiting.append(req)
+        return req
+
+    # -- per-step batch formation -----------------------------------------
+    def admit(self, *, weight_version: Optional[int] = None) -> List[Request]:
+        """FIFO-backfill free slots while the page budget allows.
+
+        A request is admitted only if pages for its *whole* prompt plus
+        one decode page are free — admission never deadlocks mid-prefill.
+        Returns the newly-admitted requests (already slotted).
+        """
+        joined: List[Request] = []
+        while self.waiting and self._free_slots:
+            req = self.waiting[0]
+            # total_len, not prompt_len: a preempted request re-enters with
+            # generated tokens that must be re-cached (recompute on resume)
+            need = self.allocator.pages_needed(req.total_len + 1)
+            if not self.allocator.can_allocate(need):
+                break
+            self.waiting.popleft()
+            req.pages = self.allocator.allocate(need)
+            req.slot = self._free_slots.pop()
+            req.state = RUNNING
+            if req.start_time == 0.0:  # keep the first admission time
+                req.start_time = time.perf_counter()
+            # a resumed (preempted) request keeps its original admission
+            # tag — its earlier tokens were produced under that version
+            if weight_version is not None and not req.generated:
+                req.weight_version = weight_version
+                req.last_weight_version = weight_version
+            self.running[req.slot] = req
+            self.stats.admitted += 1
+            joined.append(req)
+        self.stats.peak_active = max(self.stats.peak_active,
+                                     len(self.running))
+        return joined
+
+    def ensure_page_for(self, req: Request) -> None:
+        """Grow the block table so position ``num_cached`` is backed."""
+        if req.num_cached >= len(req.pages) * self.allocator.page_size:
+            req.pages.extend(self.allocator.allocate(1))
+
+    def preempt(self, req: Request) -> None:
+        """Kick a running request back to the HEAD of the admission queue,
+        freeing its slot and all its pages (vLLM-style recompute
+        preemption): its generated tokens are kept and its KV cache is
+        rebuilt by teacher-forced replay when it is re-admitted."""
+        assert req.state == RUNNING, req.state
+        self.allocator.free(req.pages)
+        self.stats.evicted_pages += len(req.pages)
+        req.pages = []
+        del self.running[req.slot]
+        self._free_slots.append(req.slot)
+        req.slot = -1
+        req.num_cached = 0
+        req.state = QUEUED
+        self.waiting.appendleft(req)
+        self.stats.preempted += 1
+
+    def finish(self, req: Request) -> None:
+        """Evict: free the pages and the slot immediately (the join half
+        of join/evict happens on the next :meth:`admit`)."""
+        assert req.state == RUNNING, req.state
+        req.state = FINISHED
+        req.finish_time = time.perf_counter()
+        self.allocator.free(req.pages)
+        self.stats.evicted_pages += len(req.pages)
+        req.pages = []
+        del self.running[req.slot]
+        self._free_slots.append(req.slot)
+        req.slot = -1
+        self.stats.finished += 1
+        self.finished.append(req)
+
+    # -- views -------------------------------------------------------------
+    @property
+    def num_active(self) -> int:
+        return len(self.running)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.running or self.waiting)
+
+    def active_requests(self) -> List[Request]:
+        return [self.running[s] for s in sorted(self.running)]

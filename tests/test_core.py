@@ -258,3 +258,89 @@ def test_split_coalesce_roundtrip():
     back = coalesce(chunks)
     np.testing.assert_array_equal(back["x"], batch["x"])
     np.testing.assert_array_equal(back["y"], batch["y"])
+
+
+# ---------------------------------------------------------------------------
+# Cluster: exclusive allocation (regression — the flag must persist)
+# ---------------------------------------------------------------------------
+def test_exclusive_allocation_blocks_later_nonexclusive_overlap():
+    c = Cluster(num_nodes=1, devices_per_node=4)
+    c.allocate("trainer", 2, device_ids=[0, 1], exclusive=True)
+    # regression: a later NON-exclusive pin on an exclusively-held device
+    # must be rejected (previously the exclusive flag was never recorded)
+    with pytest.raises(ValueError, match="exclusively held"):
+        c.allocate("rollout", 1, device_ids=[1])
+
+
+def test_exclusive_allocation_rejects_occupied_devices():
+    c = Cluster(num_nodes=1, devices_per_node=4)
+    c.allocate("rollout", 2, device_ids=[0, 1])  # non-exclusive
+    with pytest.raises(ValueError, match="occupied"):
+        c.allocate("trainer", 1, device_ids=[0], exclusive=True)
+
+
+def test_auto_allocation_skips_exclusive_devices():
+    c = Cluster(num_nodes=1, devices_per_node=4)
+    c.allocate("trainer", 2, exclusive=True)  # takes 0, 1
+    ids = c.allocate("rollout", 2)  # auto: must avoid 0 and 1
+    assert set(ids) == {2, 3}
+    # exhaustion: a further exclusive request cannot be satisfied
+    with pytest.raises(ValueError, match="cannot allocate"):
+        c.allocate("infer", 1, exclusive=True)
+
+
+def test_free_releases_exclusivity():
+    c = Cluster(num_nodes=1, devices_per_node=2)
+    c.allocate("trainer", 1, device_ids=[0], exclusive=True)
+    c.free("trainer")
+    ids = c.allocate("rollout", 1, device_ids=[0])  # now legal again
+    assert ids == [0]
+
+
+def test_nonexclusive_overlap_still_allowed():
+    """Temporal multiplexing (two workers on one device) must survive."""
+    c = Cluster(num_nodes=1, devices_per_node=2)
+    c.allocate("a", 1, device_ids=[0])
+    c.allocate("b", 1, device_ids=[0])
+    assert c.collocated("a", "b")
+
+
+# ---------------------------------------------------------------------------
+# Router.broadcast: pack once, share leaves, account per destination
+# ---------------------------------------------------------------------------
+def test_broadcast_shares_leaves_and_counts_bytes_per_destination():
+    r = Router()
+    for name in ("src", "d1", "d2", "d3"):
+        r.register(name, devices=[0])
+    payload = {"w": np.arange(6, dtype=np.float32)}
+    r.broadcast("src", ["d1", "d2", "d3"], payload)
+    got = [r.recv(d, "src") for d in ("d1", "d2", "d3")]
+    for g in got:
+        np.testing.assert_array_equal(g["w"], payload["w"])
+    # zero-copy fan-out: every destination sees the SAME leaf buffer
+    assert got[0]["w"] is got[1]["w"] is got[2]["w"]
+    st = r.stats()
+    for d in ("d1", "d2", "d3"):
+        assert st[f"src->{d}"]["messages"] == 1
+        assert st[f"src->{d}"]["bytes"] == 24  # 6 x float32 each
+
+
+def test_broadcast_cross_device_hosts_leaves_once():
+    import jax.numpy as jnp
+
+    r = Router()
+    r.register("src", devices=[0])
+    r.register("same", devices=[0])
+    r.register("far1", devices=[1])
+    r.register("far2", devices=[2])
+    obj = {"w": jnp.ones(4)}
+    r.broadcast("src", ["same", "far1", "far2"], obj)
+    same = r.recv("same", "src")
+    far1 = r.recv("far1", "src")
+    far2 = r.recv("far2", "src")
+    assert isinstance(same["w"], type(obj["w"]))  # zero-copy reference
+    assert isinstance(far1["w"], np.ndarray)      # host transfer
+    # the host copy is made once and shared across far destinations
+    assert far1["w"] is far2["w"]
+    st = r.stats()
+    assert st["src->far1"]["bytes"] == st["src->far2"]["bytes"] == 16

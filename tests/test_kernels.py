@@ -119,3 +119,109 @@ def test_grouped_matmul_linearity_property(e, scale):
     b = ops.grouped_matmul(buf, w) * scale
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# paged attention (decode over block tables)
+# ---------------------------------------------------------------------------
+def _paged_inputs(key, B, H, KV, D, P, page, nb, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    k_pages = jax.random.normal(ks[1], (P, page, KV, D), dtype)
+    v_pages = jax.random.normal(ks[2], (P, page, KV, D), dtype)
+    # distinct non-trash pages per request (page 0 is the trash page)
+    rng = np.random.default_rng(int(jax.random.randint(ks[0], (), 0, 1 << 30)))
+    tables = np.stack([rng.permutation(np.arange(1, P))[:nb]
+                       for _ in range(B)]).astype(np.int32)
+    return q, k_pages, v_pages, jnp.asarray(tables)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,D,page,nb", [
+    (1, 2, 1, 32, 8, 2),
+    (3, 4, 2, 16, 8, 4),    # GQA groups of 2
+    (2, 8, 8, 64, 16, 3),   # MHA
+    (4, 6, 2, 32, 4, 5),    # 3-way GQA groups
+])
+def test_paged_attention_sweep(B, H, KV, D, page, nb, dtype):
+    P = nb * B + 1
+    q, kp, vp, tables = _paged_inputs(
+        jax.random.PRNGKey(0), B, H, KV, D, P, page, nb, dtype)
+    # ragged context lengths incl. partial pages and a single-token ctx
+    lens = jnp.asarray(
+        [1 + (i * 7) % (nb * page) for i in range(B)], jnp.int32)
+    got = ops.paged_attention(q, kp, vp, tables, lens)
+    want = ref.paged_attention_ref(q, kp, vp, tables, lens)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    page=st.sampled_from([2, 4, 8, 16]),
+    ctx=st.integers(1, 31),
+    seed=st.integers(0, 100),
+)
+def test_paged_attention_block_size_property(page, ctx, seed):
+    """Output must be independent of the page-size tiling choice."""
+    B, H, KV, D = 2, 4, 2, 16
+    total = 32
+    nb = total // page
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    # one logically-contiguous KV stream laid out under two page sizes
+    kflat = jax.random.normal(ks[1], (B, total, KV, D))
+    vflat = jax.random.normal(ks[2], (B, total, KV, D))
+    lens = jnp.asarray([ctx, total - ctx + 1], jnp.int32)
+
+    def run(page_size):
+        nb_ = total // page_size
+        P = B * nb_ + 1
+        kp = jnp.zeros((P, page_size, KV, D))
+        vp = jnp.zeros((P, page_size, KV, D))
+        tables = np.zeros((B, nb_), np.int32)
+        pid = 1
+        for b in range(B):
+            for j in range(nb_):
+                kp = kp.at[pid].set(
+                    kflat[b, j * page_size:(j + 1) * page_size])
+                vp = vp.at[pid].set(
+                    vflat[b, j * page_size:(j + 1) * page_size])
+                tables[b, j] = pid
+                pid += 1
+        return np.asarray(ops.paged_attention(
+            q, kp, vp, jnp.asarray(tables), lens))
+
+    np.testing.assert_allclose(run(page), run(total), atol=1e-5, rtol=1e-5)
+
+
+def test_paged_attention_ignores_trash_page_contents():
+    """Positions past the context length (incl. trash-padded table rows)
+    must not influence the output."""
+    B, H, KV, D, page, nb = 2, 4, 2, 16, 4, 4
+    P = 16
+    q, kp, vp, tables = _paged_inputs(
+        jax.random.PRNGKey(3), B, H, KV, D, P, page, nb)
+    lens = jnp.asarray([3, 9], jnp.int32)
+    base = np.asarray(ops.paged_attention(q, kp, vp, tables, lens))
+    # poison the trash page and every slot past the context length
+    kp2 = kp.at[0].set(1e3)
+    vp2 = vp.at[0].set(1e3)
+    got = np.asarray(ops.paged_attention(q, kp2, vp2, tables, lens))
+    np.testing.assert_allclose(base, got, atol=1e-6)
+
+
+def test_paged_attention_empty_context_returns_zeros():
+    """context_len == 0 (inactive slot) must yield zeros, not a softmax
+    over the masked scores (i.e. the mean of the trash pages)."""
+    B, H, KV, D, page, nb = 2, 4, 2, 16, 4, 2
+    q, kp, vp, tables = _paged_inputs(
+        jax.random.PRNGKey(4), B, H, KV, D, 16, page, nb)
+    vp = vp.at[:].set(7.0)  # make averaging-garbage obvious
+    lens = jnp.asarray([0, 5], jnp.int32)
+    got = np.asarray(ops.paged_attention(q, kp, vp, tables, lens))
+    want = np.asarray(ref.paged_attention_ref(q, kp, vp, tables, lens))
+    np.testing.assert_allclose(got[0], 0.0, atol=1e-6)
+    np.testing.assert_allclose(got, want, atol=1e-5)

@@ -1,4 +1,5 @@
 """Launcher + resharding coverage (subprocess keeps device state clean)."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -8,6 +9,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import timed_weight_sync, transfer_stats
+
+
+def _subprocess_env() -> dict:
+    """Minimal env for launcher subprocesses — but carry over the
+    backend pin: without JAX_PLATFORMS, jax's backend probing can block
+    for minutes on sandboxed containers and the subprocess times out."""
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+           "HOME": os.environ.get("HOME", "/tmp")}
+    for var in ("JAX_PLATFORMS", "JAX_PLATFORM_NAME"):
+        if var in os.environ:
+            env[var] = os.environ[var]
+    return env
 
 
 def test_transfer_stats():
@@ -32,8 +45,7 @@ def test_train_launcher_smoke():
         [sys.executable, "-m", "repro.launch.train", "--arch", "yi-9b",
          "--smoke", "--steps", "3", "--batch", "2", "--seq", "32"],
         capture_output=True, text=True, timeout=420,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo")
+        env=_subprocess_env(), cwd="/root/repo")
     assert out.returncode == 0, out.stdout + out.stderr
     assert "step 0" in out.stdout and "tok/s" in out.stdout
 
@@ -45,10 +57,10 @@ def test_resharding_between_specs_subprocess():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.comm import reshard
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        from repro.launch.mesh import _make_mesh  # AxisType compat shim
+        mesh = _make_mesh((2, 4), ("data", "model"))
         x = jnp.arange(64.0).reshape(8, 8)
         a = jax.device_put(x, NamedSharding(mesh, P("data", "model")))
         dst = {"w": NamedSharding(mesh, P("model", None))}
@@ -59,6 +71,5 @@ def test_resharding_between_specs_subprocess():
     """)
     out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
                          text=True, timeout=240,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                         cwd="/root/repo")
+                         env=_subprocess_env(), cwd="/root/repo")
     assert "RESHARD_OK" in out.stdout, out.stdout + out.stderr

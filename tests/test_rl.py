@@ -215,3 +215,25 @@ def test_rlhf_ppo_four_model_workflow():
     t, s = Scheduler(prof, SchedulerConfig(
         total_batch=64, device_quantum=8)).schedule(runner.graph(), 32, 64)
     assert np.isfinite(t) and s is not None
+
+
+def test_grpo_plan_chunks_never_split_groups():
+    """Regression: a slow rollout profile (e.g. the paged engine on tiny
+    models) used to push the auto planner to pipeline chunks smaller than
+    group_size; the reward worker then fell back to groups of 1, whose
+    group-relative advantages are identically zero — training silently
+    stopped learning.  Every planned chunk must be a group multiple."""
+    from repro.core.scheduler import leaves
+
+    cfg = get_config("yi-9b").reduced().replace(
+        vocab_size=32, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128)
+    rl = GRPOConfig(batch_size=32, group_size=8, iterations=1,
+                    max_new_tokens=3, mode="auto", seed=0,
+                    profile_batches=(8,))
+    runner = GRPORunner(cfg, rl, TrainHParams(optimizer=AdamWConfig(lr=1e-3)))
+    runner.profile()
+    runner.plan_execution()
+    assert runner.controller.scheduler_cfg.chunk_multiple == rl.group_size
+    for lf in leaves(runner.plan.schedule):
+        assert lf.batch % rl.group_size == 0, (lf.worker, lf.batch)

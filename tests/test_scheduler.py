@@ -220,3 +220,22 @@ def test_auto_dominates_fixed_modes_property(k, seed, n, batch):
     # and the simulator replays the chosen plan to the same makespan
     res = Simulator(profiles).run(s, batch)
     assert res.makespan == pytest.approx(t_auto, rel=1e-6)
+
+
+def test_chunk_multiple_constrains_pipeline_granularity():
+    """Pipeline chunks must respect the data atomicity unit (e.g. a GRPO
+    group: group-relative advantages are undefined across a chunk split) —
+    every chunk size in the plan is a multiple of ``chunk_multiple``."""
+    profiles = paper_like_profiles()
+    base = dict(total_batch=64, device_quantum=1,
+                granularity_divisors=(1, 2, 4, 8, 16))
+    sch = Scheduler(profiles, SchedulerConfig(**base))
+    assert sch._granularities(64) == [4, 8, 16, 32, 64]
+    sch8 = Scheduler(profiles, SchedulerConfig(**base, chunk_multiple=8))
+    assert sch8._granularities(64) == [8, 16, 32, 64]
+    # the recursion splits sub-batches under the same constraint
+    assert sch8._granularities(16) == [8, 16]
+    t, s = sch8.schedule(grpo_graph(), 16, 64)
+    assert t < float("inf")
+    for lf in leaves(s):
+        assert lf.batch % 8 == 0, (lf.worker, lf.batch)

@@ -1,0 +1,426 @@
+"""Serve subsystem: paged KV allocator, continuous-batching scheduler,
+sampling filters, and PagedEngine parity/lifecycle contracts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.profiler import engine_cost_model, fit_tail_factor
+from repro.models import init_model
+from repro.models.layers import token_logprobs
+from repro.serve import Engine, OutOfPages, PagedEngine, PageAllocator
+from repro.serve.paging import TRASH_PAGE, pad_block_table
+from repro.serve.sampling import sample_token, top_k_logits, top_p_logits
+from repro.serve.scheduler import ContinuousScheduler
+from repro.train.data import PromptDataset
+
+
+def dense_cfg():
+    return get_config("yi-9b").reduced().replace(
+        vocab_size=32, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=128)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dense_cfg()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_model(jax.random.PRNGKey(0), cfg)
+
+
+# ---------------------------------------------------------------------------
+# page allocator
+# ---------------------------------------------------------------------------
+def test_allocator_never_hands_out_trash_page():
+    a = PageAllocator(num_pages=8, page_size=4)
+    got = a.allocate(7)
+    assert TRASH_PAGE not in got
+    assert sorted(got) == list(range(1, 8))
+
+
+def test_allocator_free_list_reuse_and_exhaustion():
+    a = PageAllocator(num_pages=6, page_size=4)
+    first = a.allocate(3)
+    assert a.num_free == 2
+    a.free(first)
+    assert a.num_free == 5
+    again = a.allocate(5)
+    assert set(first) <= set(again)  # freed pages are recycled
+    with pytest.raises(OutOfPages):
+        a.allocate(1)
+
+
+def test_allocator_double_free_asserts():
+    a = PageAllocator(num_pages=4, page_size=2)
+    pages = a.allocate(1)
+    a.free(pages)
+    with pytest.raises(AssertionError):
+        a.free(pages)
+
+
+def test_pages_needed_is_ceil_div():
+    a = PageAllocator(num_pages=4, page_size=8)
+    assert a.pages_needed(1) == 1
+    assert a.pages_needed(8) == 1
+    assert a.pages_needed(9) == 2
+
+
+def test_pad_block_table_pads_with_trash():
+    assert pad_block_table([3, 5], 4) == [3, 5, TRASH_PAGE, TRASH_PAGE]
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching scheduler
+# ---------------------------------------------------------------------------
+def _sched(max_batch=2, num_pages=9, page_size=4, max_seq=16):
+    alloc = PageAllocator(num_pages=num_pages, page_size=page_size)
+    return ContinuousScheduler(max_batch=max_batch, allocator=alloc,
+                               max_seq_len=max_seq)
+
+
+def test_scheduler_admits_fifo_up_to_slots():
+    s = _sched(max_batch=2)
+    r1 = s.submit([1, 2, 3], 4)
+    r2 = s.submit([1, 2], 4)
+    r3 = s.submit([9], 4)
+    joined = s.admit()
+    assert [r.rid for r in joined] == [r1.rid, r2.rid]
+    assert r3.state == "queued" and s.num_active == 2
+
+
+def test_scheduler_backfills_freed_slot_and_pages():
+    s = _sched(max_batch=1, num_pages=3, page_size=4)
+    r1 = s.submit([1, 2, 3], 2)
+    r2 = s.submit([4, 5], 2)
+    (a,) = s.admit()
+    assert a is r1 and s.allocator.num_free == 1
+    assert not s.admit()  # no slot free
+    s.finish(r1)  # evict: pages back on the free list immediately
+    assert s.allocator.num_free == 2 and r1.pages == []
+    (b,) = s.admit()
+    assert b is r2 and r2.slot == 0  # freed slot reused
+
+
+def test_scheduler_blocks_admission_on_page_budget():
+    # 2 slots but pages for only one prompt at a time
+    s = _sched(max_batch=2, num_pages=3, page_size=2, max_seq=8)
+    s.submit([1, 2, 3], 2)  # needs ceil(4/2)=2 pages
+    s.submit([1, 2, 3], 2)
+    joined = s.admit()
+    assert len(joined) == 1  # second must wait for pages, not slots
+
+
+def test_scheduler_ensure_page_grows_block_table():
+    s = _sched(max_batch=1, num_pages=9, page_size=2, max_seq=16)
+    r = s.submit([1, 2, 3], 8)
+    s.admit()
+    npages = len(r.pages)
+    r.num_cached = npages * 2  # simulate filling every allocated slot
+    s.ensure_page_for(r)
+    assert len(r.pages) == npages + 1
+
+
+# ---------------------------------------------------------------------------
+# sampling: top-k / top-p
+# ---------------------------------------------------------------------------
+def test_top_k_keeps_exactly_k():
+    logits = jnp.asarray([0.1, 2.0, -1.0, 3.0, 0.5])
+    out = top_k_logits(logits, 2)
+    kept = np.asarray(out) > -1e29
+    assert kept.tolist() == [False, True, False, True, False]
+
+
+def test_top_k_disabled_for_nonpositive_or_full_k():
+    logits = jnp.asarray([0.1, 2.0, -1.0])
+    np.testing.assert_array_equal(np.asarray(top_k_logits(logits, 0)),
+                                  np.asarray(logits))
+    np.testing.assert_array_equal(np.asarray(top_k_logits(logits, 3)),
+                                  np.asarray(logits))
+
+
+def test_top_p_nucleus_mass_property():
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (64,))
+    p = 0.7
+    out = np.asarray(top_p_logits(logits, p))
+    probs = np.asarray(jax.nn.softmax(logits))
+    kept = out > -1e29
+    # kept set is the smallest prefix of the sorted distribution >= p
+    order = np.argsort(-probs)
+    cum = np.cumsum(probs[order])
+    n_expected = int(np.searchsorted(cum, p)) + 1
+    assert kept.sum() == n_expected
+    assert probs[kept].sum() >= p - 1e-6
+
+
+def test_top_p_always_keeps_argmax():
+    logits = jnp.asarray([0.0, 5.0, 1.0, -2.0])
+    out = np.asarray(top_p_logits(logits, 1e-6))
+    assert out[1] > -1e29 and (out[[0, 2, 3]] < -1e29).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 16), seed=st.integers(0, 50))
+def test_sample_token_respects_top_k(k, seed):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (32,)) * 3
+    allowed = set(np.argsort(-np.asarray(logits))[:k].tolist())
+    tok, _ = sample_token(jax.random.fold_in(key, 1), logits,
+                          temperature=1.0, top_k=k)
+    assert int(tok) in allowed
+
+
+def test_sample_token_greedy_and_behaviour_logprob():
+    logits = jnp.asarray([0.0, 4.0, 1.0, 2.0])
+    tok, lp = sample_token(jax.random.PRNGKey(0), logits, temperature=0.0)
+    assert int(tok) == 1
+    # behaviour logprob is under the UNFILTERED temp-1 policy
+    want = float(token_logprobs(logits[None], jnp.asarray([1]))[0])
+    assert lp == pytest.approx(want, abs=1e-6)
+
+
+def test_sample_token_masks_padded_vocab():
+    logits = jnp.asarray([0.0, 1.0, 50.0, 60.0])  # ids 2,3 are padding
+    for s in range(8):
+        tok, _ = sample_token(jax.random.PRNGKey(s), logits,
+                              temperature=1.0, vocab_size=2)
+        assert int(tok) < 2
+
+
+# ---------------------------------------------------------------------------
+# PagedEngine vs legacy Engine
+# ---------------------------------------------------------------------------
+def test_paged_matches_legacy_token_for_token_at_temp0(cfg, params):
+    ds = PromptDataset(6, prompt_len=6, seed=0)
+    prompts = np.asarray(ds.next_batch()["prompt_tokens"])
+    legacy = Engine(cfg, max_new_tokens=8, temperature=0.0)
+    want = legacy.generate(params, jnp.asarray(prompts),
+                           key=jax.random.PRNGKey(1))
+    # fewer slots than requests -> exercises queueing + backfill
+    paged = PagedEngine(cfg, max_batch=4, page_size=4, max_new_tokens=8,
+                        temperature=0.0)
+    got = paged.generate(params, prompts, key=jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(want.tokens),
+                                  np.asarray(got.tokens))
+    np.testing.assert_array_equal(np.asarray(want.lengths),
+                                  np.asarray(got.lengths))
+    np.testing.assert_allclose(np.asarray(want.logprobs),
+                               np.asarray(got.logprobs), atol=1e-4)
+    # every page returned to the free list once the batch drained
+    assert paged.allocator.num_allocated == 0
+
+
+@pytest.mark.parametrize("page_size", [2, 4, 16])
+def test_paged_engine_parity_across_page_sizes(cfg, params, page_size):
+    ds = PromptDataset(4, prompt_len=5, seed=3)
+    prompts = np.asarray(ds.next_batch()["prompt_tokens"])
+    legacy = Engine(cfg, max_new_tokens=6, temperature=0.0)
+    want = np.asarray(legacy.generate(params, jnp.asarray(prompts)).tokens)
+    paged = PagedEngine(cfg, max_batch=2, page_size=page_size,
+                        max_new_tokens=6, temperature=0.0)
+    got = np.asarray(paged.generate(params, prompts).tokens)
+    np.testing.assert_array_equal(want, got)
+
+
+def test_paged_engine_kernel_backed_parity(cfg, params):
+    ds = PromptDataset(3, prompt_len=5, seed=2)
+    prompts = np.asarray(ds.next_batch()["prompt_tokens"])
+    ref_eng = PagedEngine(cfg, max_batch=3, page_size=4, max_new_tokens=5,
+                          temperature=0.0)
+    kern_eng = PagedEngine(cfg, max_batch=3, page_size=4, max_new_tokens=5,
+                           temperature=0.0, use_kernel=True)
+    a = ref_eng.generate(params, prompts)
+    b = kern_eng.generate(params, prompts)
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+    np.testing.assert_allclose(np.asarray(a.logprobs),
+                               np.asarray(b.logprobs), atol=1e-4)
+
+
+def test_paged_engine_scheduling_invariant_sampling(cfg, params):
+    """Per-request RNG: results must not depend on slot count/batching."""
+    ds = PromptDataset(5, prompt_len=5, seed=1)
+    prompts = np.asarray(ds.next_batch()["prompt_tokens"])
+    outs = []
+    for max_batch in (2, 5):
+        eng = PagedEngine(cfg, max_batch=max_batch, page_size=4,
+                          max_new_tokens=6, temperature=1.0)
+        outs.append(eng.generate(params, prompts,
+                                 key=jax.random.PRNGKey(7)))
+    np.testing.assert_array_equal(np.asarray(outs[0].tokens),
+                                  np.asarray(outs[1].tokens))
+    np.testing.assert_allclose(np.asarray(outs[0].logprobs),
+                               np.asarray(outs[1].logprobs), atol=1e-5)
+
+
+def test_paged_engine_logprobs_match_prefill_recompute(cfg, params):
+    """Same contract the legacy engine honours: behaviour logprobs from
+    generation equal the inference worker's recompute."""
+    from repro.train import make_prefill_step
+
+    ds = PromptDataset(4, prompt_len=6, seed=0)
+    prompts = np.asarray(ds.next_batch()["prompt_tokens"])
+    eng = PagedEngine(cfg, max_batch=4, page_size=4, max_new_tokens=6,
+                      temperature=1.0)
+    res = eng.generate(params, prompts, key=jax.random.PRNGKey(5))
+    pf = jax.jit(make_prefill_step(cfg))
+    recomputed = pf(params, {"tokens": jnp.asarray(res.tokens)})
+    S = prompts.shape[1]
+    gen_lp = np.asarray(res.logprobs)[:, S:]
+    rec_lp = np.asarray(recomputed)[:, S:]
+    mask = np.asarray(res.tokens)[:, S:] != 0
+    np.testing.assert_allclose(gen_lp[mask], rec_lp[mask], atol=2e-3)
+
+
+def test_paged_engine_ragged_lengths_and_page_recycling(cfg, params):
+    """Skewed per-request budgets: short requests leave early, pages are
+    recycled, and the engine takes far fewer slot-steps than static
+    padding would."""
+    eng = PagedEngine(cfg, max_batch=4, page_size=4, max_new_tokens=32,
+                      temperature=0.0, max_seq_len=4 + 32, num_pages=4 * 9 + 1,
+                      eos_token=-1)  # never sampled: budget-driven stop
+    ds = PromptDataset(8, prompt_len=4, seed=0)
+    prompts = np.asarray(ds.next_batch()["prompt_tokens"])
+    budgets = [2, 2, 2, 2, 2, 2, 2, 24]
+    reqs = [eng.submit(prompts[i], max_new_tokens=budgets[i], seed=i)
+            for i in range(8)]
+    eng.set_params(params)
+    done = eng.run()
+    assert len(done) == 8
+    for r, b in zip(reqs, budgets):
+        assert len(r.generated) == b
+    assert eng.allocator.num_allocated == 0
+    # static padding would cost 8 requests x (4 + 24) slot-steps in two
+    # full batches; continuous batching re-forms the batch every step
+    static_steps = 2 * (4 + 24)
+    assert eng.decode_steps < static_steps
+
+
+# ---------------------------------------------------------------------------
+# in-flight weight sync
+# ---------------------------------------------------------------------------
+def test_paged_engine_inflight_weight_update_version_tags(cfg, params):
+    params_v1 = jax.tree_util.tree_map(lambda x: x * 1.05, params)
+    eng = PagedEngine(cfg, max_batch=2, page_size=4, max_new_tokens=6,
+                      temperature=0.0, eos_token=-1)
+    ds = PromptDataset(4, prompt_len=5, seed=0)
+    prompts = np.asarray(ds.next_batch()["prompt_tokens"])
+    eng.set_params(params, version=0)
+    reqs = [eng.submit(prompts[i], seed=i) for i in range(4)]
+    # run a few steps under v0, then swap in flight
+    for _ in range(3):
+        eng.step()
+    eng.update_weights(params_v1, version=1)
+    eng.run()
+    assert eng.weight_version == 1 and eng.weight_swaps == 1
+    # requests admitted before the swap keep their admission tag (what
+    # the staleness correction references) but record the newer weights
+    early = [r for r in reqs if r.weight_version == 0]
+    late = [r for r in reqs if r.weight_version == 1]
+    assert early and late  # 2 slots x 4 requests straddle the swap
+    assert all(r.last_weight_version == 1 for r in late)
+    assert all(r.last_weight_version >= r.weight_version for r in reqs)
+
+
+def test_paged_engine_requests_after_swap_match_new_params(cfg, params):
+    """A request admitted after an in-flight swap must generate exactly
+    what a fresh engine holding only the new weights generates."""
+    params_v1 = jax.tree_util.tree_map(lambda x: x * 1.1, params)
+    ds = PromptDataset(2, prompt_len=5, seed=4)
+    prompts = np.asarray(ds.next_batch()["prompt_tokens"])
+
+    eng = PagedEngine(cfg, max_batch=1, page_size=4, max_new_tokens=5,
+                      temperature=0.0)
+    eng.set_params(params, version=0)
+    first = eng.submit(prompts[0], seed=0)
+    eng.update_weights(params_v1, version=1)  # lands before any step
+    second = eng.submit(prompts[1], seed=1)
+    eng.run()
+    assert first.weight_version == 1 and second.weight_version == 1
+
+    fresh = PagedEngine(cfg, max_batch=1, page_size=4, max_new_tokens=5,
+                        temperature=0.0)
+    fresh.set_params(params_v1, version=1)
+    ref2 = fresh.submit(prompts[1], seed=1)
+    fresh.run()
+    assert second.generated == ref2.generated
+
+
+def test_rollout_worker_paged_engine_roundtrip(cfg, params):
+    from repro.rl.workers import RolloutWorker
+
+    w = RolloutWorker("rollout/t", cfg=cfg, max_new_tokens=4,
+                      temperature=1.0, engine="paged", max_batch=4,
+                      page_size=4)
+    assert isinstance(w.engine, PagedEngine)
+    w.update_weights(params, version=3)
+    ds = PromptDataset(4, prompt_len=5, seed=0)
+    out = w.generate({"prompt_tokens": np.asarray(
+        ds.next_batch()["prompt_tokens"])})
+    assert out["tokens"].shape[1] == 5 + 4
+    assert (out["weight_versions"] == 3).all()
+    recs = w.request_records()
+    assert len(recs) == 4 and all(t >= 0 for _, t in recs)
+    w.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# profiler: measured tail factor
+# ---------------------------------------------------------------------------
+def test_fit_tail_factor_known_values():
+    assert fit_tail_factor([1.0, 1.0, 1.0, 1.0]) == pytest.approx(1.0)
+    assert fit_tail_factor([1.0, 1.0, 6.0]) == pytest.approx(6.0 / (8 / 3))
+    assert fit_tail_factor([]) == 1.0
+
+
+def test_engine_cost_model_fits_measured_tail(cfg, params):
+    eng = PagedEngine(cfg, max_batch=4, page_size=4, max_new_tokens=16,
+                      temperature=0.0, eos_token=-1)
+    ds = PromptDataset(4, prompt_len=4, seed=0)
+    prompts = np.asarray(ds.next_batch()["prompt_tokens"])
+    eng.set_params(params)
+    # warm-up request so the jitted step compiles outside the measurement
+    eng.submit(prompts[0], max_new_tokens=1, seed=99)
+    eng.run()
+    eng.pop_request_records()
+    for i, budget in enumerate([2, 2, 2, 12]):
+        eng.submit(prompts[i], max_new_tokens=budget, seed=i)
+    eng.run()
+    recs = eng.pop_request_records()
+    cm = engine_cost_model("rollout", recs)
+    # the skewed budgets must surface as a measured long tail
+    assert cm.tail_factor > 1.2
+    assert cm.slope_time >= 0.0
+    # the log is consumed
+    assert eng.pop_request_records() == []
+
+
+def test_paged_engine_preempts_on_page_exhaustion(cfg, params):
+    """A pool too small for the whole batch must trigger recompute
+    preemption (youngest request yields), not crash — and the output must
+    be identical to an uncontended run (deterministic per-request RNG +
+    teacher-forced replay)."""
+    ds = PromptDataset(4, prompt_len=6, seed=0)
+    prompts = np.asarray(ds.next_batch()["prompt_tokens"])
+
+    def run(num_pages):
+        eng = PagedEngine(cfg, max_batch=4, page_size=4, max_seq_len=32,
+                          max_new_tokens=24, temperature=1.0,
+                          num_pages=num_pages, eos_token=-1)
+        eng.set_params(params)
+        reqs = [eng.submit(prompts[i], seed=i) for i in range(4)]
+        eng.run()
+        assert eng.allocator.num_allocated == 0
+        return eng, [r.generated for r in reqs]
+
+    tight_eng, tight_out = run(num_pages=10)   # 9 usable pages < 4 seqs
+    roomy_eng, roomy_out = run(num_pages=None)  # full-occupancy pool
+    assert tight_eng.scheduler.stats.preempted > 0
+    assert roomy_eng.scheduler.stats.preempted == 0
+    assert tight_out == roomy_out
+    for out in tight_out:
+        assert len(out) == 24
