@@ -14,7 +14,7 @@ from repro.core.pipeline import (  # noqa: F401
     coalesce,
     split_batch,
 )
-from repro.core.placement import Cluster, split_devices  # noqa: F401
+from repro.core.placement import Cluster, PlacementManager, split_devices  # noqa: F401
 from repro.core.profiler import CostModel, Profiler, paper_like_profiles  # noqa: F401
 from repro.core.scheduler import (  # noqa: F401
     Async,
@@ -28,4 +28,5 @@ from repro.core.scheduler import (  # noqa: F401
     disaggregated_schedule,
 )
 from repro.core.simulator import SimResult, Simulator  # noqa: F401
+from repro.core.switching import ContextSwitcher, SwitchRecord  # noqa: F401
 from repro.core.worker import FutureHandle, Worker, WorkerFailure, WorkerGroup  # noqa: F401

@@ -20,7 +20,7 @@ from repro.comm.primitives import global_router, reset_router
 from repro.core.channel import Channel
 from repro.core.flowgraph import FlowGraph, GraphTracer
 from repro.core.pipeline import ExecutionFlowManager
-from repro.core.placement import Cluster, split_devices
+from repro.core.placement import Cluster, PlacementManager, split_devices
 from repro.core.profiler import CostModel, Profiler
 from repro.core.scheduler import (
     Async,
@@ -34,6 +34,7 @@ from repro.core.scheduler import (
     leaves,
 )
 from repro.core.simulator import Simulator
+from repro.core.switching import ContextSwitcher
 from repro.core.worker import Worker, WorkerFailure, WorkerGroup
 
 
@@ -62,6 +63,8 @@ class Controller:
         self.scheduler_cfg = scheduler_cfg or SchedulerConfig()
         self.tracer = GraphTracer()
         self.router = global_router()
+        self.placement_manager = PlacementManager(cluster)
+        self._switcher: Optional[ContextSwitcher] = None
         self._failed: List[WorkerFailure] = []
         self._kill = threading.Event()
 
@@ -140,9 +143,29 @@ class Controller:
         sim = Simulator(self.profiles)
         return sim.run(plan.schedule, total_batch)
 
+    def bind_placement(self, plan: ExecutionPlan,
+                       workers: Dict[str, Any]) -> Dict[str, List[int]]:
+        """Make the plan's placement binding: diff against the cluster's
+        current allocations and rebind every worker's device slice (and
+        mesh/shardings) to what the plan assigns."""
+        return self.placement_manager.apply(plan, workers)
+
+    @property
+    def switch_stats(self) -> Dict[str, Dict[str, float]]:
+        """Measured context-switch costs (worker -> onload/offload s)."""
+        return self._switcher.measured if self._switcher else {}
+
     def execute(self, plan: ExecutionPlan, workers: Dict[str, Any],
                 task_fns: Dict[str, Callable], batch) -> Any:
-        mgr = ExecutionFlowManager(workers, task_fns)
+        self.bind_placement(plan, workers)
+        # one switcher per (workers, profiles) pair so measured switch
+        # costs accumulate (and keep feeding the CostModels) across
+        # iterations
+        if (self._switcher is None or self._switcher.workers is not workers
+                or self._switcher.profiles is not self.profiles):
+            self._switcher = ContextSwitcher(workers, profiles=self.profiles)
+        mgr = ExecutionFlowManager(workers, task_fns,
+                                   switcher=self._switcher)
         out = mgr.run(plan.schedule, batch)
         self.last_timeline = mgr.timeline
         self.last_time = mgr.total_time

@@ -27,6 +27,21 @@ from repro.core.channel import AsyncQueue, Channel, ChannelClosed
 from repro.core.scheduler import Async, Leaf, Pipelined, Temporal, leaves
 
 
+def leading_leaves(sched) -> List[Leaf]:
+    """The leaves that run FIRST under a schedule node — the set a
+    context switch must onload at a Temporal cut.  Nested temporal
+    stages deeper in the tree onload at their own cuts (onloading the
+    whole subtree at once would make sibling temporal stages
+    co-resident, peaking memory at the sum of their working sets);
+    spatial (Pipelined/Async) sides sit on disjoint devices, so both
+    sides' leading stages count."""
+    if isinstance(sched, Leaf):
+        return [sched]
+    if isinstance(sched, Temporal):
+        return leading_leaves(sched.s)
+    return leading_leaves(sched.s) + leading_leaves(sched.t)
+
+
 def split_batch(batch: Dict[str, np.ndarray], m: int) -> List[Dict[str, np.ndarray]]:
     """Split a dict-of-arrays batch into chunks of size m along dim 0."""
     B = next(iter(batch.values())).shape[0]
@@ -37,15 +52,33 @@ def split_batch(batch: Dict[str, np.ndarray], m: int) -> List[Dict[str, np.ndarr
     return out
 
 
+def _is_integral_counter(x: Any) -> bool:
+    """An int-typed scalar (Python int, np.integer, or 0-d integer
+    array) — the only values it is safe to SUM across chunks.  Float
+    scalars are typically means/ratios/losses where summing corrupts the
+    statistic, and bools are flags; both keep last-chunk semantics."""
+    if isinstance(x, (bool, np.bool_)):
+        return False
+    if isinstance(x, (int, np.integer)):
+        return True
+    return (isinstance(x, np.ndarray) and x.ndim == 0
+            and np.issubdtype(x.dtype, np.integer))
+
+
 def coalesce(chunks: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray]:
-    """Re-assemble chunk results; non-batch values (metrics dicts, scalars)
-    keep the last chunk's value."""
+    """Re-assemble chunk results.  Batch arrays concatenate along dim 0;
+    integral scalar counters (e.g. a simulator's ``successes``) are
+    SUMMED across chunks, since each chunk counted only its own share;
+    everything else (metrics dicts, float statistics, flags, strings)
+    keeps the last chunk's value."""
     out: Dict[str, Any] = {}
     for k in chunks[0].keys():
         vals = [c[k] for c in chunks]
         first = vals[0]
         if isinstance(first, np.ndarray) and first.ndim >= 1:
             out[k] = np.concatenate(vals, axis=0)
+        elif _is_integral_counter(first):
+            out[k] = sum(vals) if len(vals) > 1 else first
         else:
             out[k] = vals[-1]
     return out
@@ -69,9 +102,13 @@ class ExecutionFlowManager:
     """
 
     def __init__(self, workers: Dict[str, Any],
-                 task_fns: Dict[str, Callable[[Any, Dict], Dict]]):
+                 task_fns: Dict[str, Callable[[Any, Dict], Dict]],
+                 switcher: Optional[Any] = None):
         self.workers = workers
         self.task_fns = task_fns
+        # managed Temporal transitions (core.switching.ContextSwitcher):
+        # per-key offload, prefetch-onload overlap, measured cost feedback
+        self.switcher = switcher
         self.timeline: List[Tuple[str, float, float, int]] = []
         self._tl_lock = threading.Lock()
 
@@ -101,14 +138,39 @@ class ExecutionFlowManager:
             return self._apply(sched.worker, batch, -1)
 
         if isinstance(sched, Temporal):
+            # prefetch-onload incoming workers whose placement does NOT
+            # conflict with the running stage — overlapped with the
+            # current stage's tail (nested trees can have disjoint sides)
+            pre = None
+            incoming = [lf.worker for lf in leading_leaves(sched.t)]
+            if self.switcher is not None:
+                s_devs = self._devices_of(sched.s)
+                safe = []
+                for name in incoming:
+                    w = self.workers.get(name)
+                    if (w is not None and getattr(w, "offloaded", False)
+                            and set(getattr(w, "devices", ())
+                                    ).isdisjoint(s_devs)):
+                        safe.append(name)
+                if safe:
+                    pre = self.switcher.prefetch(safe)
             mid = self._run(sched.s, batch)
-            # context switch: offload all of s's workers, onload t's lazily
-            for lf in leaves(sched.s):
-                w = self.workers.get(lf.worker)
-                if w is not None and not set(
-                        getattr(w, "devices", ())).isdisjoint(
-                        self._devices_of(sched.t)):
-                    w.offload()
+            # context switch at the cut: s's device-sharing workers
+            # offload first (freeing the shared devices), then t's
+            # LEADING stage onloads (deeper stages switch at their own
+            # cuts)
+            t_devs = self._devices_of(sched.t)
+            outgoing = [
+                lf.worker for lf in leaves(sched.s)
+                if (w := self.workers.get(lf.worker)) is not None
+                and not set(getattr(w, "devices", ())).isdisjoint(t_devs)]
+            if self.switcher is not None:
+                if pre is not None:
+                    pre.join()
+                self.switcher.switch(outgoing, incoming)
+            else:
+                for name in outgoing:
+                    self.workers[name].offload()
             return self._run(sched.t, mid)
 
         if isinstance(sched, Pipelined):
@@ -123,6 +185,11 @@ class ExecutionFlowManager:
                     for i, c in enumerate(chunks):
                         out = self._run(sched.s, c)
                         ch.put((i, out))
+                except BaseException as e:  # noqa: BLE001
+                    # surface producer-side failures: a silently dead
+                    # producer yields an empty coalesce downstream, which
+                    # shows up as a confusing KeyError far from the cause
+                    err.append(e)
                 finally:
                     ch.close()
 

@@ -97,6 +97,61 @@ class Cluster:
         return bool(da & db)
 
 
+class PlacementManager:
+    """Realizes an ExecutionPlan's placement on a Cluster (paper §4).
+
+    The plan's placement column used to be advisory — workers kept the
+    device slices hard-coded at construction.  This manager makes it
+    binding: :meth:`apply` diffs the planned placement against the
+    cluster's current allocations, frees owners whose slices changed (or
+    who left the plan), allocates the planned slices, and rebinds each
+    live worker via ``Worker.bind_devices`` (rebuilding its mesh and
+    re-placing its state through the resharding data plane).
+
+    Invariants:
+      * idempotent — applying the same plan twice is a no-op;
+      * no stale entries — after ``apply``, every managed owner's
+        ``Cluster._allocations`` entry equals the plan's slice exactly;
+        owners managed by a previous plan but absent from the new one
+        are freed;
+      * foreign owners (never placed by this manager and not named in
+        the plan) are left untouched.
+    """
+
+    def __init__(self, cluster: Cluster):
+        self.cluster = cluster
+        self._managed: Set[str] = set()
+
+    def apply(self, plan, workers: Optional[Dict[str, object]] = None
+              ) -> Dict[str, List[int]]:
+        """Diff + rebind; returns {worker: new_devices} for every worker
+        whose binding actually changed."""
+        placement: Dict[str, List[int]] = dict(
+            plan.placement if hasattr(plan, "placement") else plan)
+        workers = workers or {}
+        # Scope: everything this manager ever placed, plus the plan's
+        # names (adopting same-named construction-time allocations).
+        scope = self._managed | set(placement)
+        for owner in list(self.cluster._allocations):
+            if owner not in scope:
+                continue
+            cur = sorted(self.cluster._allocations.get(owner, []))
+            if cur != sorted(placement.get(owner, [])):
+                self.cluster.free(owner)
+        changed: Dict[str, List[int]] = {}
+        for name, devs in placement.items():
+            if devs and name not in self.cluster._allocations:
+                self.cluster.allocate(name, len(devs),
+                                      device_ids=list(devs))
+            w = workers.get(name)
+            if w is not None and tuple(devs) != tuple(
+                    getattr(w, "devices", ())):
+                w.bind_devices(devs)
+                changed[name] = list(devs)
+        self._managed = {n for n, d in placement.items() if d}
+        return changed
+
+
 def split_devices(n_devices: int, shares: Sequence[int]) -> List[List[int]]:
     """Partition [0..n) into contiguous groups of the given sizes."""
     assert sum(shares) <= n_devices, (shares, n_devices)

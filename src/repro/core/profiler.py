@@ -27,6 +27,12 @@ class CostModel:
     mem_per_item: float = 0.0  # bytes per item
     onload_time: float = 0.0
     offload_time: float = 0.0
+    # measured weight-sync cost (comm.resharding.timed_weight_sync): the
+    # seconds/bytes this worker pays to refresh trainer weights when it
+    # comes (back) online — charged with its onload on a Temporal cut.
+    # 0 for workers that never receive synced weights.
+    sync_time: float = 0.0
+    sync_bytes: float = 0.0
     scalable: bool = True  # time /devices (SPMD); else replication-only
     min_devices: int = 1
     max_useful_devices: int = 10**9

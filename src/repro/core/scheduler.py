@@ -313,12 +313,14 @@ class Scheduler:
     def _switch_cost(self, gs: FlowGraph, gt: FlowGraph) -> float:
         """Only the workers at the boundary actually swap at the cut: the
         sinks of G_s offload, the sources of G_t onload — interior nodes'
-        switches are charged by the nested recursion."""
+        switches are charged by the nested recursion.  A source that
+        receives trainer weights also pays its measured weight-sync cost
+        (``CostModel.sync_time``) when it comes online."""
         sinks = [n for n in gs.nodes if not list(gs.g.successors(n))]
         sources = [n for n in gt.nodes if not list(gt.g.predecessors(n))]
         off = sum(self.profiles[w].offload_time
                   for n_ in sinks for w in self._members.get(n_, (n_,)))
-        on = sum(self.profiles[w].onload_time
+        on = sum(self.profiles[w].onload_time + self.profiles[w].sync_time
                  for n_ in sources for w in self._members.get(n_, (n_,)))
         return off + on
 
@@ -365,7 +367,7 @@ def collocated_schedule(graph: FlowGraph, profiles, n: int, batch: int
             return t, leaf
         t_rest, rest = build(i + 1)
         switch = (sum(profiles[m].offload_time for m in ms)
-                  + sum(profiles[mm].onload_time
+                  + sum(profiles[mm].onload_time + profiles[mm].sync_time
                         for mm in members.get(order[i + 1], (order[i + 1],))))
         return t + t_rest + switch, Temporal(leaf, rest, switch)
 
@@ -388,6 +390,12 @@ def disaggregated_schedule(graph: FlowGraph, profiles, n: int, batch: int,
                                           granularity=batch // div)
             if best is None or cand[0] < best[0]:
                 best = cand
+        if best is None:
+            # batch divisible by none of the candidate divisors (e.g. a
+            # prime batch like 7): degenerate to one full-batch chunk
+            # instead of returning None (which TypeErrors on unpack)
+            best = disaggregated_schedule(graph, profiles, n, batch,
+                                          granularity=batch)
         return best
     import networkx as nx
     dag, members = graph.condense()

@@ -7,7 +7,13 @@ simulator, reward...).  The base class provides:
   * ``onload/offload`` — resource management hooks; the default
     implementation moves the worker's registered state pytrees between
     device and host memory (the CPU↔GPU swap of the paper, realized as
-    ``jax.device_put`` / ``jax.device_get``);
+    ``jax.device_put`` / ``jax.device_get``).  Both accept a ``keys``
+    subset so a context switch can move the optimizer state separately
+    from the parameters (the ContextSwitcher exploits this);
+  * ``bind_devices`` — plan-driven placement: the controller rebinds a
+    worker to the device slice its ExecutionPlan assigns, rebuilding the
+    worker's mesh and re-placing registered state through the
+    resharding data plane;
   * built-in per-call timing, feeding the profiler/scheduler.
 
 ``WorkerGroup`` launches N worker processes (threads here; Ray actors in
@@ -58,7 +64,9 @@ class Worker:
         self.router.register(name, devices=list(devices))
         self._state: Dict[str, Any] = {}  # registered device state
         self._host_state: Dict[str, Any] = {}
-        self.offloaded = False
+        self._offloaded: set = set()  # keys currently living on the host
+        self._state_lock = threading.RLock()
+        self._mesh = None  # lazily built from `devices`
         self.timers: List[TimerRecord] = []
         self._timer_lock = threading.Lock()
 
@@ -72,22 +80,70 @@ class Worker:
         return self.router.recv(self.name, src, timeout=timeout)
 
     # ------------------------------------------------------------------
+    # placement (plan-driven binding)
+    # ------------------------------------------------------------------
+    @property
+    def device_mesh(self):
+        """1-D mesh over the local jax devices backing this worker's
+        cluster device slice; None when the worker owns no devices."""
+        if self._mesh is None and self.devices:
+            from repro.launch.mesh import mesh_for_devices
+            self._mesh = mesh_for_devices(self.devices)
+        return self._mesh
+
+    def state_shardings(self, tree: Any) -> Any:
+        """Replicated destination shardings on this worker's mesh — the
+        dst side of a ``comm.resharding.timed_weight_sync``.  None when
+        the worker has no devices (host-only workers)."""
+        mesh = self.device_mesh
+        if mesh is None or tree is None:
+            return None
+        from repro.utils.sharding import tree_replicated
+        return tree_replicated(tree, mesh)
+
+    def bind_devices(self, devices: Sequence[int]) -> None:
+        """Rebind this worker to a new device slice (plan-driven
+        placement).  Rebuilds the mesh, refreshes the router registration
+        (placement-aware backend choice must see the new devices), and
+        re-places on-device state through the resharding data plane."""
+        devices = tuple(devices)
+        if devices == self.devices:
+            return
+        self.devices = devices
+        self._mesh = None
+        self.router.register(self.name, devices=list(devices))
+        mesh = self.device_mesh
+        if mesh is None:
+            return
+        from repro.comm.resharding import reshard
+        with self._state_lock:
+            for k, tree in self._state.items():
+                if tree is None or k in self._offloaded:
+                    continue
+                shardings = self.state_shardings(tree)
+                if shardings is not None:
+                    self._state[k] = reshard(tree, shardings)
+
+    # ------------------------------------------------------------------
     # resource management (paper: onload/offload for context switching)
     # ------------------------------------------------------------------
     def register_state(self, key: str, tree: Any) -> None:
         self._state[key] = tree
 
     def get_state(self, key: str) -> Any:
-        if self.offloaded:
-            self.onload()
-        return self._state[key]
+        with self._state_lock:
+            if key in self._offloaded:
+                self.onload(keys=(key,))
+            return self._state[key]
 
     def set_state(self, key: str, tree: Any) -> None:
         # a fresh write supersedes any offloaded copy of this key —
         # otherwise the next onload() would clobber it with stale state
         # (e.g. weight sync into an offloaded rollout/inference worker)
-        self._state[key] = tree
-        self._host_state.pop(key, None)
+        with self._state_lock:
+            self._state[key] = tree
+            self._host_state.pop(key, None)
+            self._offloaded.discard(key)
 
     def state_bytes(self) -> int:
         total = 0
@@ -97,29 +153,66 @@ class Worker:
                     total += int(l.nbytes)
         return total
 
-    def offload(self) -> None:
-        """Move registered device state to host memory (frees accelerator)."""
-        if self.offloaded:
-            return
-        for k, tree in self._state.items():
-            self._host_state[k] = jax.tree_util.tree_map(
-                lambda x: np.asarray(x) if isinstance(x, jax.Array) else x,
-                tree,
-            )
-        self._state = {k: None for k in self._state}
-        self.offloaded = True
+    @property
+    def offloaded(self) -> bool:
+        """True when any registered key currently lives on the host."""
+        return bool(self._offloaded)
 
-    def onload(self) -> None:
-        """Restore host state onto the device."""
-        if not self.offloaded:
-            return
-        for k, tree in self._host_state.items():
-            self._state[k] = jax.tree_util.tree_map(
-                lambda x: jax.device_put(x) if isinstance(x, np.ndarray) else x,
-                tree,
-            )
-        self._host_state = {}
-        self.offloaded = False
+    def offloaded_keys(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._offloaded))
+
+    def offload(self, keys: Optional[Sequence[str]] = None) -> Tuple[str, ...]:
+        """Move registered device state to host memory (frees accelerator).
+
+        ``keys`` selects a subset — e.g. the optimizer state separately
+        from the params during a context switch.  Returns the keys that
+        actually moved."""
+        moved = []
+        with self._state_lock:
+            ks = list(keys) if keys is not None else list(self._state)
+            for k in ks:
+                tree = self._state.get(k)
+                if k in self._offloaded or tree is None:
+                    continue
+                self._host_state[k] = jax.tree_util.tree_map(
+                    lambda x: np.asarray(x) if isinstance(x, jax.Array) else x,
+                    tree,
+                )
+                self._state[k] = None
+                self._offloaded.add(k)
+                moved.append(k)
+        return tuple(moved)
+
+    def onload(self, keys: Optional[Sequence[str]] = None) -> Tuple[str, ...]:
+        """Restore host state onto THIS WORKER'S devices; returns the keys
+        moved.  Placement goes through the worker's mesh, so state that
+        sat offloaded across a ``bind_devices`` rebind still lands on the
+        new slice (a bare ``device_put`` would commit it to the default
+        device — incompatible with the worker's other committed state on
+        a multi-device backend)."""
+        moved = []
+        sharding = None
+        mesh = self.device_mesh
+        if mesh is not None:
+            from repro.utils.sharding import replicated
+            sharding = replicated(mesh)
+
+        def put(x):
+            if not isinstance(x, np.ndarray):
+                return x
+            return jax.device_put(x) if sharding is None \
+                else jax.device_put(x, sharding)
+
+        with self._state_lock:
+            ks = list(keys) if keys is not None else list(self._offloaded)
+            for k in ks:
+                if k not in self._offloaded:
+                    continue
+                tree = self._host_state.pop(k)
+                self._state[k] = jax.tree_util.tree_map(put, tree)
+                self._offloaded.discard(k)
+                moved.append(k)
+        return tuple(moved)
 
     # ------------------------------------------------------------------
     def _timed(self, fn_name: str, fn: Callable, *args, **kw):

@@ -18,6 +18,8 @@ from repro.rl.workers import (  # noqa: F401
 from repro.rl.rlhf_workflow import (  # noqa: F401
     CriticWorker,
     PPOConfig,
+    PPORewardWorker,
     ReferenceWorker,
     RLHFRunner,
 )
+from repro.rl.runner import WorkflowRunner  # noqa: F401

@@ -9,12 +9,15 @@ The *logical* workflow is the plain imperative loop of the paper:
         reward.score(...)
         actor.train(scored_ch).wait()
 
-M2Flow then decides where/when each worker actually runs: the runner
-first executes one *profiling iteration* (tracing the channel data flow
-to extract the workflow graph, timing each worker at two granularities),
-asks the Scheduler for a plan (or a forced collocated/disaggregated
-mode), and runs the remaining iterations through the Execution Flow
-Manager under that plan — no change to the workflow code.
+M2Flow then decides where/when each worker actually runs: the shared
+:class:`~repro.rl.runner.WorkflowRunner` base executes one *profiling
+iteration* (timing each worker at two granularities), asks the Scheduler
+for a plan (or a forced collocated/disaggregated mode), and runs the
+remaining iterations through the Execution Flow Manager under that plan
+— which is *binding*: ``Controller.execute`` rebinds every worker's
+device slice to the plan's placement, Temporal cuts go through the
+managed ContextSwitcher, and weight sync is a measured resharding
+data-plane operation.  No change to the workflow code.
 """
 from __future__ import annotations
 
@@ -25,15 +28,8 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import (
-    Channel,
-    Cluster,
-    Controller,
-    FlowGraph,
-    Profiler,
-    SchedulerConfig,
-)
-from repro.core.profiler import CostModel, fit_tail_factor, measure_onoffload
+from repro.core import Cluster, FlowGraph, SchedulerConfig
+from repro.rl.runner import WorkflowRunner
 from repro.rl.workers import (
     ActorWorker,
     InferenceWorker,
@@ -86,25 +82,36 @@ class IterationStats:
     metrics: Dict[str, float] = field(default_factory=dict)
 
 
-class GRPORunner:
-    """Owns the workers + data and runs the M2Flow-scheduled loop."""
+class GRPORunner(WorkflowRunner):
+    """GRPO over the shared WorkflowRunner (binding-placement) loop."""
+
+    weight_sync_workers = ("rollout", "inference")
 
     def __init__(self, cfg: ModelConfig, rl: GRPOConfig,
                  hp: Optional[TrainHParams] = None,
                  cluster: Optional[Cluster] = None):
         self.model_cfg = cfg
         self.rl = rl
-        self.cluster = cluster or Cluster(num_nodes=1, devices_per_node=8)
-        hp = hp or TrainHParams()
+        self.hp = hp or TrainHParams()
         assert rl.batch_size % rl.group_size == 0, (
             f"batch_size={rl.batch_size} must be a multiple of "
             f"group_size={rl.group_size} (whole GRPO groups)")
         n_queries = rl.batch_size // rl.group_size
         self.data = PromptDataset(n_queries, prompt_len=rl.prompt_len,
                                   seed=rl.seed)
+        super().__init__(iterations=rl.iterations,
+                         batch_size=rl.batch_size, mode=rl.mode,
+                         profile_batches=rl.profile_batches,
+                         cluster=cluster)
 
-        self.actor = ActorWorker("actor/0", cfg=cfg, hp=hp, seed=rl.seed,
-                                 devices=self.cluster.allocate("actor", 4))
+    # ------------------------------------------------------------------
+    # declarative surface
+    # ------------------------------------------------------------------
+    def build_workers(self) -> Dict[str, Any]:
+        cfg, rl = self.model_cfg, self.rl
+        self.actor = ActorWorker(
+            "actor/0", cfg=cfg, hp=self.hp, seed=rl.seed,
+            devices=self.cluster.allocate("actor", 4))
         self.rollout = RolloutWorker(
             "rollout/0", cfg=cfg, max_new_tokens=rl.max_new_tokens,
             temperature=rl.temperature, seed=rl.seed,
@@ -114,41 +121,18 @@ class GRPORunner:
             devices=self.cluster.allocate("inference", 2))
         self.reward = RewardWorker(
             "reward/0", prompt_len=rl.prompt_len, group_size=rl.group_size)
+        return {"rollout": self.rollout, "inference": self.inference,
+                "reward": self.reward, "actor": self.actor}
 
-        self.workers = {"rollout": self.rollout, "inference": self.inference,
-                        "reward": self.reward, "actor": self.actor}
-        self.task_fns = {
+    def build_task_fns(self) -> Dict[str, Any]:
+        return {
             "rollout": lambda w, c: w.generate(c),
             "inference": lambda w, c: w.compute_logprobs(c),
             "reward": lambda w, c: w.score(c),
             "actor": lambda w, c: w.train(c),
         }
-        self.controller = Controller(self.cluster)
-        self.stats: List[IterationStats] = []
-        self.plan = None
 
-    # ------------------------------------------------------------------
-    def _expand_groups(self, batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
-        """Each query is repeated group_size times (GRPO sampling)."""
-        g = self.rl.group_size
-        return {k: np.repeat(v, g, axis=0) for k, v in batch.items()}
-
-    def _sync_weights(self) -> None:
-        params = self.actor.params()
-        self.rollout.update_weights(params)
-        self.inference.update_weights(params)
-
-    # ------------------------------------------------------------------
-    # Phase 1: profiling iteration — trace graph + fit cost models
-    # ------------------------------------------------------------------
-    def profile(self) -> FlowGraph:
-        self._sync_weights()
-        prof = Profiler(warmup=1, repeats=1)
-        profiles: Dict[str, CostModel] = {}
-        base = self._expand_groups(self.data.next_batch())
-
-        chain = {}
-        chain["rollout"] = base
+    def build_graph(self) -> FlowGraph:
         graph = FlowGraph()
         prev = None
         for name in WORKFLOW_ORDER:
@@ -156,42 +140,13 @@ class GRPORunner:
             if prev is not None:
                 graph.add_edge(prev, name, channel=f"{prev}->{name}")
             prev = name
-
-        for name in WORKFLOW_ORDER:
-            w, fn = self.workers[name], self.task_fns[name]
-            inp = chain[name]
-
-            def run_at(b, w=w, fn=fn, inp=inp):
-                sub = {k: v[:b] for k, v in inp.items()}
-                return fn(w, sub)
-
-            sizes = [b for b in self.rl.profile_batches
-                     if b <= self.rl.batch_size] or [self.rl.batch_size]
-            cm = prof.measure(name, run_at, sizes)
-            out = fn(w, inp)
-            nxt = WORKFLOW_ORDER[WORKFLOW_ORDER.index(name) + 1] \
-                if name != WORKFLOW_ORDER[-1] else None
-            if nxt:
-                chain[nxt] = out
-            if hasattr(w, "_state") and w.state_bytes():
-                on, off = measure_onoffload(w)
-                cm.onload_time, cm.offload_time = on, off
-            cm.base_mem = float(w.state_bytes())
-            if name == "rollout" and hasattr(w, "request_records"):
-                # engine-backed tail: fit the long-tail multiplier from
-                # measured per-request completion times (continuous
-                # engine) instead of assuming the Fig. 2 length model
-                recs = w.request_records()
-                if recs:
-                    cm.tail_factor = fit_tail_factor(t for _, t in recs)
-            profiles[name] = cm
-        self.controller.profiles = profiles
-        self.graph = graph
         return graph
 
-    # ------------------------------------------------------------------
-    def plan_execution(self) -> None:
-        self.controller.scheduler_cfg = SchedulerConfig(
+    def make_batch(self) -> Dict[str, np.ndarray]:
+        return self._expand_groups(self.data.next_batch())
+
+    def scheduler_config(self) -> SchedulerConfig:
+        return SchedulerConfig(
             total_batch=self.rl.batch_size,
             granularity_divisors=(1, 2, 4),
             device_quantum=2,
@@ -200,33 +155,31 @@ class GRPORunner:
             # (identically zero advantage — no learning signal)
             chunk_multiple=self.rl.group_size,
         )
+
+    # ------------------------------------------------------------------
+    def _expand_groups(self, batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Each query is repeated group_size times (GRPO sampling)."""
+        g = self.rl.group_size
+        return {k: np.repeat(v, g, axis=0) for k, v in batch.items()}
+
+    def plan_execution(self) -> None:
+        self.controller.scheduler_cfg = self.scheduler_config()
         if self.rl.async_depth > 0:
             # Horizon plan with the configured staleness bound.  NOTE:
-            # async_depth supersedes rl.mode, and on this single-host
-            # executor the plan's device placement is advisory — the
-            # AsyncPipelineDriver realizes the cross-iteration overlap
-            # (the plan's defining feature) directly on the workers; the
-            # placement column matters when workers map to real device
-            # slices (cluster deployment).
+            # async_depth supersedes rl.mode; the AsyncPipelineDriver
+            # realizes the cross-iteration overlap directly on the
+            # workers while the plan's placement column is still made
+            # binding (bind_placement) before the horizon starts.
             self.plan = self.controller.plan_async(
-                self.graph, total_batch=self.rl.batch_size,
+                self.graph(), total_batch=self.rl.batch_size,
                 iterations=self.rl.iterations,
                 depths=[self.rl.async_depth])
         else:
             self.plan = self.controller.plan(
-                self.graph, total_batch=self.rl.batch_size,
-                mode=self.rl.mode)
+                self.graph(), total_batch=self.rl.batch_size,
+                mode=self.mode)
 
     # ------------------------------------------------------------------
-    def run_iteration(self, it: int) -> IterationStats:
-        t0 = time.perf_counter()
-        self._sync_weights()
-        batch = self._expand_groups(self.data.next_batch())
-        out = self.controller.execute(
-            self.plan, self.workers, self.task_fns, batch)
-        wall = time.perf_counter() - t0
-        return self._record_stats(it, wall, out)
-
     def _record_stats(self, it: int, wall: float, out) -> IterationStats:
         rewards = out.get("rewards", np.zeros(1))
         acc = float((rewards > 0).mean())
@@ -237,6 +190,11 @@ class GRPORunner:
             if self.actor.metrics_history else {})
         self.stats.append(st)
         return st
+
+    def log_iteration(self, st: IterationStats) -> None:
+        print(f"iter {st.iteration:3d}  wall={st.wall_time:6.2f}s "
+              f"reward={st.mean_reward:+6.2f} acc={st.accuracy:5.2f} "
+              f"loss={st.metrics.get('loss', float('nan')):+.4f}")
 
     # ------------------------------------------------------------------
     # Bounded-staleness off-policy loop (async_depth = K >= 1)
@@ -256,6 +214,9 @@ class GRPORunner:
         from repro.core.pipeline import AsyncPipelineDriver
         from repro.rl.advantage import staleness_importance_weights
 
+        # the async plan's placement is binding too
+        self.controller.bind_placement(self.plan, self.workers)
+
         # atomically-swapped (version, params) snapshot; version counts
         # completed trainer updates and always matches the params beside it
         self._published = (0, self.actor.params())
@@ -263,16 +224,15 @@ class GRPORunner:
 
         def sync(_gate_version: int) -> int:
             version, params = self._published
-            # the paged engine applies this in flight at its next step
-            # boundary; the version tag rides along so per-request
-            # weight_versions in the rollout output match the queue tag
-            self.rollout.update_weights(params, version=version)
-            self.inference.update_weights(params)
+            # measured resharding sync; the paged engine applies it in
+            # flight at its next step boundary and the version tag rides
+            # along so per-request weight_versions match the queue tag
+            self._sync_weights(params=params, version=version)
             return version  # tag = the version actually pulled
 
         def produce(i: int, version: int):
             # rollout -> behaviour logprobs -> reward, all at `version`
-            batch = self._expand_groups(self.data.next_batch())
+            batch = self.make_batch()
             chunk = self.task_fns["rollout"](self.rollout, batch)
             chunk = self.task_fns["inference"](self.inference, chunk)
             chunk = self.task_fns["reward"](self.reward, chunk)
@@ -320,22 +280,12 @@ class GRPORunner:
     def finish_async(self) -> None:  # kept for API compatibility
         pass
 
-    def run(self, verbose: bool = True) -> List[IterationStats]:
-        self.profile()
-        self.plan_execution()
-        if verbose:
-            print(self.plan.pretty())
+    def run_loop(self, verbose: bool) -> None:
         if self.rl.async_depth > 0:
             self._run_async_horizon(verbose)
-            return self.stats
-        for it in range(self.rl.iterations):
-            st = self.run_iteration(it)
-            if verbose:
-                print(f"iter {it:3d}  wall={st.wall_time:6.2f}s "
-                      f"reward={st.mean_reward:+6.2f} acc={st.accuracy:5.2f} "
-                      f"loss={st.metrics.get('loss', float('nan')):+.4f}")
+            return
+        super().run_loop(verbose)
         self.finish_async()
-        return self.stats
 
     def throughput(self) -> float:
         """tokens/sec over the measured iterations (paper metric)."""

@@ -10,11 +10,12 @@ plus the rollout and inference workers shared with GRPO.  The workflow
 graph has 6 nodes with a diamond (rollout feeds reference/critic/reward
 in parallel, all meeting at the actor update) — the richest scheduling
 graph in the repo, and the reason RLHF is the paper's motivating example
-for flexible orchestration.
+for flexible orchestration.  The runner goes through the shared
+:class:`~repro.rl.runner.WorkflowRunner`, so the diamond exercises the
+same binding-placement profile → plan → execute path as GRPO.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -23,12 +24,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import Cluster, Controller, FlowGraph, SchedulerConfig
+from repro.core import Cluster, FlowGraph, SchedulerConfig
 from repro.core.worker import Worker
 from repro.models import forward, init_model
 from repro.models.layers import dense_init, token_logprobs
 from repro.rl.advantage import gae_advantages, whiten
 from repro.rl.reward import math_reward
+from repro.rl.runner import WorkflowRunner
 from repro.rl.workers import InferenceWorker, RolloutWorker
 from repro.train.data import PromptDataset
 from repro.train.optimizer import (
@@ -164,6 +166,50 @@ class PPOActorWorker(Worker):
 
 
 # ---------------------------------------------------------------------------
+# PPO reward + advantage worker (the GRPO RewardWorker's PPO analogue)
+# ---------------------------------------------------------------------------
+class PPORewardWorker(Worker):
+    """Rule-based reward + per-token GAE over the critic's values.
+
+    Consumes ``values`` (from the critic) alongside the rollout tokens,
+    places the scalar reward on the last valid token, and runs GAE +
+    whitening — so advantage estimation is a schedulable workflow node
+    rather than inline runner code."""
+
+    def __init__(self, name: str, *, prompt_len: int, gamma: float = 1.0,
+                 lam: float = 0.95, devices=(), process_index: int = 0):
+        super().__init__(name, devices=devices, process_index=process_index)
+        self.prompt_len = prompt_len
+        self.gamma = gamma
+        self.lam = lam
+
+    def score(self, chunk: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        toks = chunk["tokens"]
+        B, S = toks.shape
+        rewards = math_reward(toks, chunk["answers"], self.prompt_len)
+        mask = np.zeros((B, S), np.float32)
+        mask[:, self.prompt_len:] = toks[:, self.prompt_len:] != 0
+
+        # --- per-token GAE: reward lands on the last valid token ---
+        values = chunk["values"] * mask  # (B, S)
+        last_idx = np.maximum(mask.cumsum(1).argmax(1), self.prompt_len)
+        r_tok = np.zeros((B, S), np.float32)
+        r_tok[np.arange(B), last_idx] = rewards
+        # treat the response as a short episode over time axis S
+        adv, ret = gae_advantages(
+            r_tok.T,
+            np.concatenate([values.T, np.zeros((1, B), np.float32)]),
+            np.zeros((S, B), np.float32), gamma=self.gamma, lam=self.lam)
+        adv = whiten(adv.T, mask)
+        out = dict(chunk)
+        out["rewards"] = rewards
+        out["advantages"] = adv * mask
+        out["returns"] = ret.T * mask
+        out["loss_mask"] = mask
+        return out
+
+
+# ---------------------------------------------------------------------------
 # Runner
 # ---------------------------------------------------------------------------
 @dataclass
@@ -178,6 +224,7 @@ class PPOConfig:
     lam: float = 0.95
     mode: str = "auto"
     seed: int = 0
+    profile_batches: tuple = (8, 32)
 
 
 @dataclass
@@ -190,22 +237,40 @@ class PPOIterStats:
     metrics: Dict[str, float] = field(default_factory=dict)
 
 
-class RLHFRunner:
-    """actor+critic+reference+reward PPO over the M2Flow runtime."""
+class RLHFRunner(WorkflowRunner):
+    """actor+critic+reference+reward PPO over the M2Flow runtime.
+
+    Declares the 6-node diamond to the shared WorkflowRunner; profiling,
+    planning, binding placement, managed context switches and measured
+    weight sync are all inherited.  The critic's value update rides in
+    ``post_execute`` (it trains on the coalesced full batch the actor
+    just consumed)."""
+
+    weight_sync_workers = ("rollout", "inference")
 
     def __init__(self, cfg: ModelConfig, ppo: PPOConfig,
-                 hp: Optional[TrainHParams] = None):
+                 hp: Optional[TrainHParams] = None,
+                 cluster: Optional[Cluster] = None):
         self.cfg = cfg
         self.ppo = ppo
-        self.cluster = Cluster(num_nodes=1, devices_per_node=8)
-        hp = hp or TrainHParams(optimizer=AdamWConfig(lr=1e-3, clip_norm=1.0),
-                                kl_coef=ppo.kl_coef, entropy_coef=0.02)
+        self.hp = hp or TrainHParams(
+            optimizer=AdamWConfig(lr=1e-3, clip_norm=1.0),
+            kl_coef=ppo.kl_coef, entropy_coef=0.02)
         self.data = PromptDataset(ppo.batch_size, prompt_len=ppo.prompt_len,
                                   seed=ppo.seed, add_only=True)
         self.data.max_operand = 3
+        super().__init__(iterations=ppo.iterations,
+                         batch_size=ppo.batch_size, mode=ppo.mode,
+                         profile_batches=ppo.profile_batches,
+                         cluster=cluster)
 
+    # ------------------------------------------------------------------
+    # declarative surface
+    # ------------------------------------------------------------------
+    def build_workers(self) -> Dict[str, Any]:
+        cfg, ppo = self.cfg, self.ppo
         self.actor = PPOActorWorker(
-            "actor/0", cfg=cfg, hp=hp, seed=ppo.seed,
+            "actor/0", cfg=cfg, hp=self.hp, seed=ppo.seed,
             devices=self.cluster.allocate("actor", 2))
         self.rollout = RolloutWorker(
             "rollout/0", cfg=cfg, max_new_tokens=ppo.max_new_tokens,
@@ -219,11 +284,27 @@ class RLHFRunner:
             devices=self.cluster.allocate("reference", 1))
         self.critic = CriticWorker(
             "critic/0", cfg=cfg, seed=ppo.seed + 1,
-            devices=self.cluster.allocate("critic", 2))
-        self.stats: List[PPOIterStats] = []
+            devices=self.cluster.allocate("critic_v", 2))
+        self.reward = PPORewardWorker(
+            "reward/0", prompt_len=ppo.prompt_len, gamma=ppo.gamma,
+            lam=ppo.lam)
+        return {"rollout": self.rollout, "inference": self.inference,
+                "reference": self.reference, "critic_v": self.critic,
+                "reward": self.reward, "actor": self.actor}
 
-    # the 6-node RLHF workflow graph (for the scheduler/benchmarks)
-    def graph(self) -> FlowGraph:
+    def build_task_fns(self) -> Dict[str, Any]:
+        return {
+            "rollout": lambda w, c: w.generate(c),
+            "inference": lambda w, c: w.compute_logprobs(c),
+            "reference": lambda w, c: w.ref_logprobs(c),
+            "critic_v": lambda w, c: w.values(c),
+            "reward": lambda w, c: w.score(c),
+            "actor": lambda w, c: w.train(c),
+        }
+
+    # the 6-node RLHF workflow graph (for the scheduler/benchmarks);
+    # critic_v → reward encodes the data dependency of GAE on values
+    def build_graph(self) -> FlowGraph:
         g = FlowGraph()
         for w in ("rollout", "inference", "reference", "critic_v", "reward",
                   "actor"):
@@ -232,66 +313,46 @@ class RLHFRunner:
         g.add_edge("rollout", "reference")
         g.add_edge("rollout", "critic_v")
         g.add_edge("rollout", "reward")
+        g.add_edge("critic_v", "reward")
         g.add_edge("inference", "actor")
         g.add_edge("reference", "actor")
         g.add_edge("critic_v", "actor")
         g.add_edge("reward", "actor")
         return g
 
-    def _sync(self):
-        p = self.actor.params()
-        self.rollout.update_weights(p)
-        self.inference.update_weights(p)
+    def make_batch(self) -> Dict[str, np.ndarray]:
+        return dict(self.data.next_batch())
 
-    def run_iteration(self, it: int) -> PPOIterStats:
-        t0 = time.perf_counter()
-        self._sync()
-        ppo = self.ppo
-        batch = self.data.next_batch()
-        # rollout
-        chunk = self.rollout.generate(dict(batch))
-        # fan-out: inference / reference / critic values / reward
-        chunk = self.inference.compute_logprobs(chunk)
-        chunk = self.reference.ref_logprobs(chunk)
-        chunk = self.critic.values(chunk)
-        toks = chunk["tokens"]
-        B, S = toks.shape
-        rewards = math_reward(toks, batch["answers"], ppo.prompt_len)
-        mask = np.zeros((B, S), np.float32)
-        mask[:, ppo.prompt_len:] = toks[:, ppo.prompt_len:] != 0
+    def scheduler_config(self) -> SchedulerConfig:
+        # chunk_multiple = full batch: GAE whitening and the value target
+        # are batch-global statistics, so pipeline chunks must never
+        # split an update batch
+        return SchedulerConfig(
+            total_batch=self.ppo.batch_size,
+            granularity_divisors=(1, 2, 4),
+            device_quantum=1,
+            chunk_multiple=self.ppo.batch_size,
+        )
 
-        # --- per-token GAE: reward lands on the last valid token ---
-        values = chunk["values"] * mask  # (B, S)
-        last_idx = np.maximum(mask.cumsum(1).argmax(1), ppo.prompt_len)
-        r_tok = np.zeros((B, S), np.float32)
-        r_tok[np.arange(B), last_idx] = rewards
-        # treat the response as a short episode over time axis S
-        adv, ret = gae_advantages(
-            r_tok.T, np.concatenate([values.T, np.zeros((1, B), np.float32)]),
-            np.zeros((S, B), np.float32), gamma=ppo.gamma, lam=ppo.lam)
-        adv = whiten(adv.T, mask)
-        chunk["advantages"] = adv * mask
-        chunk["returns"] = ret.T * mask
-        chunk["loss_mask"] = mask
+    # ------------------------------------------------------------------
+    def post_execute(self, out):
+        # the critic's value update rides with the training stage
+        return self.critic.train_value(out)
 
-        # --- updates ---
-        chunk = self.actor.train(chunk)
-        chunk = self.critic.train_value(chunk)
+    def _record_stats(self, it: int, wall: float, out) -> PPOIterStats:
+        rewards = out.get("rewards", np.zeros(1))
         st = PPOIterStats(
-            iteration=it, wall_time=time.perf_counter() - t0,
+            iteration=it, wall_time=wall,
             mean_reward=float(rewards.mean()),
             accuracy=float((rewards > 0).mean()),
-            value_loss=chunk["value_loss"],
-            metrics=chunk.get("metrics", {}))
+            value_loss=out.get("value_loss", float("nan")),
+            metrics=out.get("metrics", {}))
         self.stats.append(st)
         return st
 
-    def run(self, verbose: bool = True) -> List[PPOIterStats]:
-        for it in range(self.ppo.iterations):
-            st = self.run_iteration(it)
-            if verbose and (it % 5 == 0 or it == self.ppo.iterations - 1):
-                print(f"ppo iter {it:3d} wall={st.wall_time:5.2f}s "
-                      f"reward={st.mean_reward:+6.2f} acc={st.accuracy:4.2f} "
-                      f"vloss={st.value_loss:7.3f} "
-                      f"kl={st.metrics.get('kl_ref', 0.0):+.4f}")
-        return self.stats
+    def log_iteration(self, st: PPOIterStats) -> None:
+        if st.iteration % 5 == 0 or st.iteration == self.ppo.iterations - 1:
+            print(f"ppo iter {st.iteration:3d} wall={st.wall_time:5.2f}s "
+                  f"reward={st.mean_reward:+6.2f} acc={st.accuracy:4.2f} "
+                  f"vloss={st.value_loss:7.3f} "
+                  f"kl={st.metrics.get('kl_ref', 0.0):+.4f}")

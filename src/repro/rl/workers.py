@@ -67,6 +67,19 @@ class RolloutWorker(Worker):
         self.key = jax.random.PRNGKey(seed + process_index)
         self.register_state("params", None)
 
+    def bind_devices(self, devices: Sequence[int]) -> None:
+        """Plan-driven rebinding must move the ENGINE's device state too:
+        the paged KV pool (and any applied/pending weights) follows the
+        worker onto its new mesh, or the jitted step would receive a
+        cache and params committed to incompatible device sets."""
+        old = self.devices
+        super().bind_devices(devices)
+        if self.devices != old and isinstance(self.engine, PagedEngine):
+            mesh = self.device_mesh
+            if mesh is not None:
+                from repro.utils.sharding import replicated
+                self.engine.rebind_devices(replicated(mesh))
+
     # weight sync (paper §2.1): trainer -> rollout.  On the paged engine
     # this is NOT a barrier — the update is enqueued and applied at the
     # next step boundary while requests stay in flight.

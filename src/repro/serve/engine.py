@@ -255,6 +255,26 @@ class PagedEngine:
                 version = base + 1
             self._pending.append((version, params))
 
+    def rebind_devices(self, sharding) -> None:
+        """Re-place the engine's device-resident state — page pools,
+        applied params, pending updates — onto ``sharding``.  Called when
+        the execution plan rebinds the rollout worker's device slice: the
+        KV pool must live where the weights live, or the jitted step sees
+        inputs committed to incompatible device sets."""
+        def put(tree):
+            return jax.tree_util.tree_map(
+                lambda x: (jax.device_put(x, sharding)
+                           if isinstance(x, jax.Array) else x), tree)
+
+        with self._sync_lock:
+            self.cache = PagedKVCache(
+                k=jax.device_put(self.cache.k, sharding),
+                v=jax.device_put(self.cache.v, sharding))
+            if self.params is not None:
+                self.params = put(self.params)
+            self._pending = deque(
+                (v, put(p)) for v, p in self._pending)
+
     def _apply_pending(self) -> None:
         # params/weight_version are written under the lock: update_weights
         # reads weight_version to auto-assign the next version, so an

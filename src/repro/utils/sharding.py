@@ -71,6 +71,18 @@ def named(mesh: Mesh, shape: Sequence[int], axes: Sequence[AxisName]) -> NamedSh
     return NamedSharding(mesh, spec_for(mesh, shape, axes))
 
 
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated sharding on ``mesh``."""
+    return NamedSharding(mesh, P())
+
+
+def tree_replicated(tree, mesh: Mesh):
+    """A pytree of replicated NamedShardings matching ``tree`` — the dst
+    side of a weight sync onto a worker's mesh (comm.resharding)."""
+    s = replicated(mesh)
+    return jax.tree_util.tree_map(lambda _: s, tree)
+
+
 _ACTIVE_MESH: list = [None]
 
 

@@ -260,6 +260,34 @@ def test_split_coalesce_roundtrip():
     np.testing.assert_array_equal(back["y"], batch["y"])
 
 
+def test_coalesce_sums_scalar_counters():
+    """Regression: integral counters (e.g. SimulatorWorker's `successes`)
+    used to keep only the LAST chunk's value — undercounted under any
+    pipelined plan.  Integer scalars must sum; float statistics (means,
+    ratios, losses) and dicts/metrics keep last-chunk semantics."""
+    chunks = [
+        {"x": np.ones((2, 3)), "successes": 3, "rate": 0.25,
+         "count0d": np.int64(2), "metrics": {"loss": 1.0}, "tag": "a",
+         "flag": True},
+        {"x": np.zeros((2, 3)), "successes": 4, "rate": 0.5,
+         "count0d": np.int64(5), "metrics": {"loss": 2.0}, "tag": "b",
+         "flag": False},
+    ]
+    out = coalesce(chunks)
+    assert out["successes"] == 7          # int counter: summed
+    assert out["count0d"] == 7            # 0-d integer array: summed
+    assert out["rate"] == 0.5             # float statistic: NOT summed
+    assert out["metrics"] == {"loss": 2.0}  # dict: keep last
+    assert out["tag"] == "b"              # string: keep last
+    assert out["flag"] is False           # bool is not a counter
+    assert out["x"].shape == (4, 3)
+
+
+def test_coalesce_single_chunk_passthrough():
+    out = coalesce([{"successes": 5, "m": {"a": 1}}])
+    assert out["successes"] == 5 and out["m"] == {"a": 1}
+
+
 # ---------------------------------------------------------------------------
 # Cluster: exclusive allocation (regression — the flag must persist)
 # ---------------------------------------------------------------------------

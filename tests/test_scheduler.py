@@ -2,6 +2,7 @@
 agreement — the paper's core claims at the scheduling level."""
 import itertools
 
+import numpy as np
 import pytest
 
 from repro.core import (
@@ -127,6 +128,37 @@ def test_brute_force_agreement_two_workers():
             tb = profiles["b"].time(m, N - ns)
             cands.append(ta + tb + (M // m - 1) * max(ta, tb))
     assert abs(t_auto - min(cands)) < 1e-9
+
+
+def test_disaggregated_indivisible_batch_falls_back_to_full_batch():
+    """Regression: batch=7 divides none of the candidate divisors
+    (2,4,8,16,32); disaggregated_schedule returned None, which
+    TypeError'd on unpack.  It must fall back to granularity=batch."""
+    profiles = paper_like_profiles()
+    g = grpo_graph()
+    t, s = disaggregated_schedule(g, profiles, 16, 7)
+    assert np.isfinite(t) and s is not None
+    for lf in leaves(s):
+        assert lf.batch == 7  # one full-batch chunk
+
+
+def test_scheduler_switch_cost_charges_measured_weight_sync():
+    """A temporal cut whose incoming side receives trainer weights pays
+    the measured sync cost (CostModel.sync_time) with its onload."""
+    profiles = {
+        "train": CostModel("train", base_time=0.1, offload_time=0.5),
+        "gen": CostModel("gen", base_time=0.1, onload_time=0.5,
+                         sync_time=0.7),
+    }
+    g = FlowGraph()
+    g.add_worker("train"); g.add_worker("gen")
+    g.add_edge("train", "gen")
+    sch = Scheduler(profiles, SchedulerConfig(total_batch=8))
+    sch._members = {}
+    cost = sch._switch_cost(g.subgraph(["train"]), g.subgraph(["gen"]))
+    assert cost == pytest.approx(0.5 + 0.5 + 0.7)
+    t_col, s_col = collocated_schedule(g, profiles, 4, 8)
+    assert s_col.switch_cost == pytest.approx(0.5 + 0.5 + 0.7)
 
 
 def test_simulator_matches_scheduler_estimate():
