@@ -2,50 +2,21 @@
 vectorized CPU simulator, with the cyclic sim↔generation workflow that
 drives the paper's hybrid scheduling (Fig. 1 bottom-left, Fig. 9).
 
-The simulator↔policy loop forms a CYCLE in the workflow graph; the
-scheduler collapses it into a single node (Algorithm 1 line 2) and then
-chooses hybrid/temporal placement for {cycle, advantage, train}.
+The whole loop lives in :class:`repro.rl.EmbodiedPPORunner`: the
+simulator↔policy cycle is a collapsed node in the workflow graph, the
+scheduler records a realization (collocated alternation or hybrid
+fine-grained pipelining) on the plan, and the ExecutionFlowManager runs
+it as a real closed loop — this script is just configuration.
 
-The policy is a small decoder-only LM over discretized observations:
-prompt = [BOS, obs-token ×4] → one action token (9 discrete actions).
 Success rate on the reach task should climb far above the random policy.
 
 Run:  PYTHONPATH=src python examples/embodied_ppo.py [--iters 60]
+      [--mode auto|collocated|hybrid] [--checkpoint-dir ck --every 10]
 """
 import argparse
 import sys
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config
-from repro.core import Cluster, Controller, FlowGraph, SchedulerConfig
-from repro.core.profiler import CostModel
-from repro.models import forward, init_model
-from repro.models.layers import token_logprobs
-from repro.rl.advantage import gae_advantages, whiten
-from repro.rl.env import EnvConfig, VecReachEnv
-from repro.train.optimizer import AdamWConfig, init_adamw
-from repro.train.trainer import TrainHParams, make_train_step
-
-# token layout
-PAD, BOS = 0, 1
-OBS_BASE, OBS_BINS, OBS_DIM = 2, 6, 4
-ACT_BASE, NUM_ACTIONS = OBS_BASE + OBS_BINS * OBS_DIM, 9
-VOCAB = ACT_BASE + NUM_ACTIONS  # 35
-SEQ = 1 + OBS_DIM + 1  # BOS + obs + action
-
-
-def obs_to_tokens(obs: np.ndarray) -> np.ndarray:
-    """(N, 4) float obs -> (N, 5) int tokens [BOS, d0..d3]."""
-    clipped = np.clip((obs + 1.5) / 3.0, 0.0, 0.999)
-    bins = (clipped * OBS_BINS).astype(np.int32)
-    toks = OBS_BASE + np.arange(OBS_DIM)[None, :] * OBS_BINS + bins
-    return np.concatenate(
-        [np.full((obs.shape[0], 1), BOS, np.int32), toks.astype(np.int32)],
-        axis=1)
+from repro.rl import EmbodiedPPOConfig, EmbodiedPPORunner
 
 
 def main(argv=None):
@@ -54,112 +25,33 @@ def main(argv=None):
     ap.add_argument("--envs", type=int, default=64)
     ap.add_argument("--horizon", type=int, default=16)
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "collocated", "hybrid"],
+                    help="cycle realization (auto = Algorithm 1 picks)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="periodic trainer checkpoints; rerunning with "
+                         "the same dir resumes from the last save")
+    ap.add_argument("--every", type=int, default=10,
+                    help="checkpoint period (iterations)")
     args = ap.parse_args(argv)
 
-    cfg = get_config("stablelm-12b").reduced().replace(
-        name="stablelm-policy", vocab_size=VOCAB, d_model=128, num_heads=4,
-        num_kv_heads=2, d_ff=256, max_seq_len=SEQ)
-    key = jax.random.PRNGKey(0)
-    params = init_model(key, cfg)
-    opt = init_adamw(params)
-    hp = TrainHParams(optimizer=AdamWConfig(lr=args.lr, clip_norm=1.0),
-                      clip_eps_low=0.2, clip_eps_high=0.2)
-    train_step = jax.jit(make_train_step(cfg, hp))
-
-    @jax.jit
-    def act(params, prompt, key):
-        logits, _ = forward(params, cfg, prompt)
-        last = logits[:, -1].astype(jnp.float32)
-        mask = (jnp.arange(last.shape[-1]) >= ACT_BASE) & (
-            jnp.arange(last.shape[-1]) < ACT_BASE + NUM_ACTIONS)
-        last = jnp.where(mask, last, -1e30)
-        tok = jax.random.categorical(key, last, axis=-1)
-        lp = token_logprobs(last, tok)
-        return tok.astype(jnp.int32), lp
-
-    env = VecReachEnv(EnvConfig(num_envs=args.envs,
-                                max_steps=args.horizon), seed=0)
-
-    # ---- workflow graph with the sim<->policy cycle; the controller plans
-    # the hybrid schedule exactly as for any workflow ----
-    g = FlowGraph()
-    for w in ("simulator", "policy_gen", "advantage", "train"):
-        g.add_worker(w)
-    g.add_edge("simulator", "policy_gen")
-    g.add_edge("policy_gen", "simulator")  # the cycle
-    g.add_edge("policy_gen", "advantage")
-    g.add_edge("advantage", "train")
-    profiles = {
-        "simulator": CostModel("simulator", base_time=0.2, slope_time=1e-4,
-                               scalable=False, max_useful_devices=4),
-        "policy_gen": CostModel("policy_gen", base_time=0.05,
-                                slope_time=2e-3, onload_time=0.2,
-                                offload_time=0.2),
-        "advantage": CostModel("advantage", base_time=0.01, slope_time=1e-5),
-        "train": CostModel("train", base_time=0.1, slope_time=1e-3,
-                           onload_time=0.4, offload_time=0.3),
-    }
-    ctl = Controller(Cluster(num_nodes=1, devices_per_node=8),
-                     profiles=profiles,
-                     scheduler_cfg=SchedulerConfig(
-                         total_batch=args.envs,
-                         granularity_divisors=(1, 2, 4), device_quantum=2))
-    plan = ctl.plan(g, total_batch=args.envs, mode="auto")
+    rl = EmbodiedPPOConfig(
+        num_envs=args.envs, horizon=args.horizon, iterations=args.iters,
+        lr=args.lr, mode=args.mode,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.every if args.checkpoint_dir else 0)
+    runner = EmbodiedPPORunner(rl)
     print("M2Flow plan for the embodied workflow "
           "(cycle collapsed into one node):")
-    print(plan.pretty())
+    runner.run(verbose=True)
 
-    succ_hist = []
-    for it in range(args.iters):
-        t0 = time.time()
-        # ---- rollout the cycle for `horizon` steps ----
-        toks = np.zeros((args.horizon, args.envs, SEQ), np.int32)
-        lps = np.zeros((args.horizon, args.envs), np.float32)
-        rews = np.zeros((args.horizon, args.envs), np.float32)
-        dones = np.zeros((args.horizon, args.envs), np.float32)
-        successes = 0
-        obs = env.observe()
-        for t in range(args.horizon):
-            prompt = obs_to_tokens(obs)
-            key, sub = jax.random.split(key)
-            a_tok, lp = act(params, jnp.asarray(prompt), sub)
-            a_tok, lp = np.asarray(a_tok), np.asarray(lp)
-            obs, r, d, info = env.step(a_tok - ACT_BASE)
-            toks[t, :, :SEQ - 1] = prompt
-            toks[t, :, SEQ - 1] = a_tok
-            lps[t] = lp
-            rews[t] = r
-            dones[t] = d
-            successes += int(info["success"].sum())
-
-        # ---- advantages: whitened discounted returns (critic-free PPO) ----
-        values = np.zeros((args.horizon + 1, args.envs), np.float32)
-        adv, _ = gae_advantages(rews, values, dones, gamma=0.95, lam=1.0)
-        adv = whiten(adv)
-
-        # ---- PPO update over all (env, step) transitions ----
-        B = args.horizon * args.envs
-        tokens = toks.reshape(B, SEQ)
-        old_lp = np.zeros((B, SEQ), np.float32)
-        old_lp[:, SEQ - 1] = lps.reshape(B)
-        advantages = np.zeros((B, SEQ), np.float32)
-        advantages[:, SEQ - 1] = adv.reshape(B)
-        mask = np.zeros((B, SEQ), np.float32)
-        mask[:, SEQ - 1] = 1.0
-        params, opt, metrics = train_step(params, opt, {
-            "tokens": jnp.asarray(tokens),
-            "old_logprobs": jnp.asarray(old_lp),
-            "advantages": jnp.asarray(advantages),
-            "loss_mask": jnp.asarray(mask)})
-        rate = successes / args.envs
-        succ_hist.append(rate)
-        if it % 5 == 0 or it == args.iters - 1:
-            w = succ_hist[-10:]
-            print(f"iter {it:3d} wall={time.time() - t0:5.2f}s "
-                  f"success/env={rate:5.2f} avg10={sum(w)/len(w):5.2f} "
-                  f"reward={rews.sum(0).mean():+6.2f}")
-    final = sum(succ_hist[-10:]) / len(succ_hist[-10:])
-    first = sum(succ_hist[:10]) / min(len(succ_hist), 10)
+    curve = runner.success_curve()
+    if not curve:  # checkpoint already covered every iteration
+        print("\ncheckpoint already covers all requested iterations; "
+              "raise --iters to continue training")
+        return 0
+    first = sum(curve[:10]) / min(len(curve), 10)
+    final = sum(curve[-10:]) / len(curve[-10:])
     print(f"\nsuccess rate: first10={first:.2f} -> last10={final:.2f}")
     return 0
 

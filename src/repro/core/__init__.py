@@ -7,12 +7,20 @@ from repro.core.channel import (  # noqa: F401
     VersionedItem,
 )
 from repro.core.controller import Controller, ExecutionPlan  # noqa: F401
-from repro.core.flowgraph import FlowGraph, GraphTracer, TraceEvent  # noqa: F401
+from repro.core.flowgraph import (  # noqa: F401
+    FlowGraph,
+    GraphTracer,
+    TraceEvent,
+    cycle_node_name,
+)
 from repro.core.pipeline import (  # noqa: F401
     AsyncPipelineDriver,
+    CycleSpec,
     ExecutionFlowManager,
     coalesce,
+    merge_cycle_chunks,
     split_batch,
+    stack_cycle_steps,
 )
 from repro.core.placement import Cluster, PlacementManager, split_devices  # noqa: F401
 from repro.core.profiler import CostModel, Profiler, paper_like_profiles  # noqa: F401

@@ -44,6 +44,12 @@ class ExecutionPlan:
     est_time: float
     placement: Dict[str, List[int]]
     mode: str  # "auto" | "collocated" | "disaggregated"
+    # collapsed-cycle membership: {collapsed node name: member workers}
+    # (only nodes with >= 2 members).  Recorded at plan time so the
+    # executor can run the cycle's members without re-condensing the
+    # graph, and so the placement column binds the MEMBER workers (the
+    # real ones) instead of the synthetic collapsed name.
+    members: Dict[str, Tuple[str, ...]] = field(default_factory=dict)
 
     def pretty(self) -> str:
         lines = [f"mode={self.mode} est={self.est_time:.2f}s"]
@@ -98,9 +104,10 @@ class Controller:
         else:
             sch = Scheduler(self.profiles, self.scheduler_cfg)
             t, sched = sch.schedule(graph, n, total_batch)
-        placement = self._place(sched, list(range(n)))
+        members = self._cycle_members(graph)
+        placement = self._place(sched, list(range(n)), members)
         return ExecutionPlan(schedule=sched, est_time=t, placement=placement,
-                             mode=mode)
+                             mode=mode, members=members)
 
     def plan_async(self, graph: FlowGraph, *, total_batch: int,
                    iterations: int = 8,
@@ -116,25 +123,50 @@ class Controller:
                                       iterations=iterations, depths=depths)
         mode = (f"async-{sched.depth}" if isinstance(sched, Async)
                 else "auto")
-        placement = self._place(sched, list(range(n)))
+        members = self._cycle_members(graph)
+        placement = self._place(sched, list(range(n)), members)
         return ExecutionPlan(schedule=sched, est_time=t, placement=placement,
-                             mode=mode)
+                             mode=mode, members=members)
 
-    def _place(self, sched, devices: List[int]) -> Dict[str, List[int]]:
-        """Spatial stages get disjoint device slices; temporal stages share."""
+    @staticmethod
+    def _cycle_members(graph: FlowGraph) -> Dict[str, Tuple[str, ...]]:
+        _, members = graph.condense()
+        return {name: ms for name, ms in members.items() if len(ms) > 1}
+
+    def _place(self, sched, devices: List[int],
+               members: Optional[Dict[str, Tuple[str, ...]]] = None
+               ) -> Dict[str, List[int]]:
+        """Spatial stages get disjoint device slices; temporal stages
+        share.  A collapsed-cycle leaf binds its MEMBER workers: the
+        hybrid realization pins each member to its recorded disjoint
+        share (Leaf.member_devices); the collocated realization gives
+        every member the leaf's full (time-shared) slice."""
         out: Dict[str, List[int]] = {}
+        members = members or {}
         if isinstance(sched, Leaf):
-            out[sched.worker] = devices[: sched.devices] or devices
+            devs = devices[: sched.devices] or devices
+            ms = members.get(sched.worker, ())
+            if len(ms) > 1:
+                if sched.cycle_mode == "hybrid" and sched.member_devices:
+                    cur = 0
+                    for m, share in zip(ms, sched.member_devices):
+                        out[m] = devs[cur:cur + share] or list(devs)
+                        cur += share
+                else:
+                    for m in ms:
+                        out[m] = list(devs)
+            else:
+                out[sched.worker] = devs
             return out
         if isinstance(sched, Temporal):
-            out.update(self._place(sched.s, devices))
-            out.update(self._place(sched.t, devices))
+            out.update(self._place(sched.s, devices, members))
+            out.update(self._place(sched.t, devices, members))
             return out
         if isinstance(sched, (Pipelined, Async)):
             # both sides own disjoint device slices
             n_s = sum(l.devices for l in leaves(sched.s))
-            out.update(self._place(sched.s, devices[:n_s]))
-            out.update(self._place(sched.t, devices[n_s:]))
+            out.update(self._place(sched.s, devices[:n_s], members))
+            out.update(self._place(sched.t, devices[n_s:], members))
             return out
         raise TypeError(type(sched))
 
@@ -156,7 +188,8 @@ class Controller:
         return self._switcher.measured if self._switcher else {}
 
     def execute(self, plan: ExecutionPlan, workers: Dict[str, Any],
-                task_fns: Dict[str, Callable], batch) -> Any:
+                task_fns: Dict[str, Callable], batch,
+                cycle_specs: Optional[Dict[str, Any]] = None) -> Any:
         self.bind_placement(plan, workers)
         # one switcher per (workers, profiles) pair so measured switch
         # costs accumulate (and keep feeding the CostModels) across
@@ -165,8 +198,11 @@ class Controller:
                 or self._switcher.profiles is not self.profiles):
             self._switcher = ContextSwitcher(workers, profiles=self.profiles)
         mgr = ExecutionFlowManager(workers, task_fns,
-                                   switcher=self._switcher)
+                                   switcher=self._switcher,
+                                   members=plan.members,
+                                   cycle_specs=cycle_specs)
         out = mgr.run(plan.schedule, batch)
         self.last_timeline = mgr.timeline
         self.last_time = mgr.total_time
+        self.last_cycle_log = mgr.cycle_log
         return out

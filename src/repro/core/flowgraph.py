@@ -24,6 +24,13 @@ class TraceEvent:
     nbytes: int = 0
 
 
+def cycle_node_name(members: Iterable[str]) -> str:
+    """Canonical name of a collapsed cycle node — the single place the
+    naming convention lives (condense, cycle-spec registration, tests)."""
+    ms = tuple(sorted(members))
+    return ms[0] if len(ms) == 1 else "cycle(" + "+".join(ms) + ")"
+
+
 class FlowGraph:
     """Directed workflow graph over worker (group) names."""
 
@@ -73,8 +80,9 @@ class FlowGraph:
         """Collapse strongly-connected components into single nodes.
 
         Returns (dag, members) where members maps the collapsed node name
-        to its original workers.  Collapsed nodes are later scheduled by
-        even device partitioning (paper §3.4 last paragraph).
+        to its original workers.  Collapsed nodes are scheduled as a unit
+        (paper §3.4 last paragraph) and executed as a closed loop by the
+        ExecutionFlowManager (Leaf.cycle_mode realization).
         """
         comp = nx.condensation(self.g)
         dag = FlowGraph()
@@ -82,7 +90,7 @@ class FlowGraph:
         names: Dict[int, str] = {}
         for cid, data in comp.nodes(data=True):
             ms = tuple(sorted(data["members"]))
-            name = ms[0] if len(ms) == 1 else "cycle(" + "+".join(ms) + ")"
+            name = cycle_node_name(ms)
             names[cid] = name
             members[name] = ms
             dag.add_worker(name)

@@ -94,6 +94,82 @@ class StagePlan:
     shares_devices_with_next: bool = False
 
 
+# ---------------------------------------------------------------------------
+# Collapsed-cycle execution (paper §3.4: the embodied sim<->generation
+# loop is ONE schedulable node; the executor realizes it as a closed loop)
+# ---------------------------------------------------------------------------
+_CYCLE_BOOKKEEPING = ("cycle_step", "env_ids", "rollout_round")
+
+
+def stack_cycle_steps(step_outs: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+    """Default trajectory assembly: per-step arrays stack to (T, ...);
+    integral scalar counters (e.g. the simulator's ``successes``) sum
+    across steps; everything else keeps the last step's value.  Loop
+    bookkeeping keys are dropped."""
+    out: Dict[str, Any] = {}
+    for k in step_outs[0].keys():
+        if k in _CYCLE_BOOKKEEPING:
+            continue
+        vals = [s[k] for s in step_outs if k in s]
+        if len(vals) != len(step_outs):
+            continue
+        first = vals[0]
+        if isinstance(first, np.ndarray) and first.ndim >= 1:
+            out[k] = np.stack(vals)  # (T, N, ...)
+        elif _is_integral_counter(first):
+            out[k] = sum(vals) if len(vals) > 1 else first
+        else:
+            out[k] = vals[-1]
+    return out
+
+
+def merge_cycle_chunks(chunk_results: Sequence[Dict[str, Any]]
+                       ) -> Dict[str, Any]:
+    """Re-join per-chunk trajectories from the hybrid realization along
+    the env axis (axis 1 of the (T, N, ...) stacks)."""
+    out: Dict[str, Any] = {}
+    for k in chunk_results[0].keys():
+        vals = [r[k] for r in chunk_results]
+        first = vals[0]
+        if isinstance(first, np.ndarray) and first.ndim >= 2:
+            out[k] = np.concatenate(vals, axis=1)
+        elif _is_integral_counter(first):
+            out[k] = sum(vals) if len(vals) > 1 else first
+        else:
+            out[k] = vals[-1]
+    return out
+
+
+@dataclass
+class CycleSpec:
+    """Closed-loop execution recipe for one collapsed cycle node.
+
+    The schedule's Leaf records WHERE the cycle runs (realization +
+    device split); the CycleSpec says HOW one loop step flows through
+    the members:
+
+      * ``order`` — member invocation order within one step (e.g. the
+        policy acts on the current obs, then the simulator steps);
+      * ``steps`` — loop iterations (the rollout horizon T);
+      * ``prime`` — optional member task run once before the loop to
+        seed the carry (e.g. the simulator's initial observation);
+      * ``chunks`` — env-axis split for the hybrid realization's
+        fine-grained pipeline (2 = double-buffered obs/action queues:
+        the simulator steps chunk i while generation acts on chunk i+1);
+      * ``collect`` — per-step outputs -> trajectory dict
+        (default :func:`stack_cycle_steps`).
+
+    The executor injects ``cycle_step`` (the loop index) and, in hybrid
+    mode, per-chunk ``env_ids`` into the carry; member tasks that need
+    determinism across realizations must key their randomness on them.
+    """
+    order: Tuple[str, ...]
+    steps: int
+    prime: Optional[str] = None
+    chunks: int = 2
+    collect: Optional[Callable[[Sequence[Dict]], Dict]] = None
+
+
 class ExecutionFlowManager:
     """Runs a Schedule tree over real workers.
 
@@ -103,12 +179,22 @@ class ExecutionFlowManager:
 
     def __init__(self, workers: Dict[str, Any],
                  task_fns: Dict[str, Callable[[Any, Dict], Dict]],
-                 switcher: Optional[Any] = None):
+                 switcher: Optional[Any] = None,
+                 members: Optional[Dict[str, Tuple[str, ...]]] = None,
+                 cycle_specs: Optional[Dict[str, CycleSpec]] = None):
         self.workers = workers
         self.task_fns = task_fns
         # managed Temporal transitions (core.switching.ContextSwitcher):
         # per-key offload, prefetch-onload overlap, measured cost feedback
         self.switcher = switcher
+        # collapsed-cycle support: node name -> member workers (from the
+        # plan) and node name -> CycleSpec (from the workflow runner)
+        self.members = members or {}
+        self.cycle_specs = cycle_specs or {}
+        # what each executed cycle leaf ACTUALLY ran: (node, mode,
+        # member_devices, chunks) — plan-honoring tests read this
+        self.cycle_log: List[Tuple[str, str, Optional[Tuple[int, ...]],
+                                   int]] = []
         self.timeline: List[Tuple[str, float, float, int]] = []
         self._tl_lock = threading.Lock()
 
@@ -135,6 +221,8 @@ class ExecutionFlowManager:
 
     def _run(self, sched, batch: Dict) -> Dict:
         if isinstance(sched, Leaf):
+            if len(self.members.get(sched.worker, ())) > 1:
+                return self._run_cycle(sched, batch)
             return self._apply(sched.worker, batch, -1)
 
         if isinstance(sched, Temporal):
@@ -142,7 +230,8 @@ class ExecutionFlowManager:
             # conflict with the running stage — overlapped with the
             # current stage's tail (nested trees can have disjoint sides)
             pre = None
-            incoming = [lf.worker for lf in leading_leaves(sched.t)]
+            incoming = self._expand_cycle_members(
+                lf.worker for lf in leading_leaves(sched.t))
             if self.switcher is not None:
                 s_devs = self._devices_of(sched.s)
                 safe = []
@@ -161,8 +250,9 @@ class ExecutionFlowManager:
             # cuts)
             t_devs = self._devices_of(sched.t)
             outgoing = [
-                lf.worker for lf in leaves(sched.s)
-                if (w := self.workers.get(lf.worker)) is not None
+                name for name in self._expand_cycle_members(
+                    lf.worker for lf in leaves(sched.s))
+                if (w := self.workers.get(name)) is not None
                 and not set(getattr(w, "devices", ())).isdisjoint(t_devs)]
             if self.switcher is not None:
                 if pre is not None:
@@ -175,8 +265,19 @@ class ExecutionFlowManager:
 
         if isinstance(sched, Pipelined):
             m = sched.granularity
+            arrs = [v for v in batch.values()
+                    if isinstance(v, np.ndarray) and v.ndim >= 1]
+            B = arrs[0].shape[0] if arrs else m
+            if batch.get("_cycle_traj") or B <= m:
+                # single-chunk pipeline — or a cycle trajectory, whose
+                # leading axis is TIME, not batch items, so the env-axis
+                # chunk contract does not apply: the two sides simply run
+                # back-to-back on their disjoint devices
+                return self._run(sched.t, self._run(sched.s, batch))
             chunks = split_batch(batch, m)
-            ch = Channel.create(f"pipe-{id(sched)}-{time.time_ns()}")
+            # anonymous per-run channel: construct directly — create()
+            # would pin it in the global registry forever
+            ch = Channel(f"pipe-{id(sched)}-{time.time_ns()}")
             results: List[Optional[Dict]] = [None] * len(chunks)
             err: List[BaseException] = []
 
@@ -224,10 +325,160 @@ class ExecutionFlowManager:
 
         raise TypeError(type(sched))
 
+    # ------------------------------------------------------------------
+    # collapsed-cycle leaves: closed-loop execution of the members
+    # ------------------------------------------------------------------
+    def _run_cycle(self, leaf: Leaf, batch: Dict) -> Dict:
+        ms = self.members[leaf.worker]
+        spec = self.cycle_specs.get(leaf.worker)
+        if spec is None:
+            raise KeyError(
+                f"no CycleSpec registered for collapsed cycle node "
+                f"{leaf.worker!r} (members {ms}); the workflow runner "
+                f"must pass cycle_specs to Controller.execute")
+        # HONOR the realization the scheduler recorded on the Leaf —
+        # the executor must not re-derive (and possibly contradict) it
+        mode = leaf.cycle_mode or "collocated"
+        chunks = 1
+        if mode == "hybrid":
+            B = self._cycle_batch_size(batch)
+            # the chunk count is part of the recorded realization (the
+            # scheduler priced it); spec.chunks is the fallback for
+            # hand-built plans
+            chunks = max(leaf.cycle_chunks or spec.chunks, 1)
+            while chunks > 1 and B % chunks:
+                chunks -= 1
+            if chunks == 1:
+                # no divisible chunking exists: the pipeline degenerates
+                # to full-batch alternation — log what actually runs
+                mode = "collocated"
+        self.cycle_log.append(
+            (leaf.worker, mode, leaf.member_devices, chunks))
+        out = (self._run_cycle_hybrid(spec, batch, chunks)
+               if mode == "hybrid"
+               else self._run_cycle_collocated(spec, batch))
+        # trajectories are step-major (T, N, ...): mark them so a
+        # downstream Pipelined stage never mistakes the time axis for
+        # the env-chunk axis
+        out["_cycle_traj"] = True
+        return out
+
+    @staticmethod
+    def _cycle_batch_size(batch: Dict) -> int:
+        for v in batch.values():
+            if isinstance(v, np.ndarray) and v.ndim >= 1:
+                return v.shape[0]
+        raise ValueError("cycle batch has no array to infer env count from")
+
+    def _run_cycle_collocated(self, spec: CycleSpec, batch: Dict) -> Dict:
+        """Members alternate on the shared devices, one full-batch loop
+        step at a time."""
+        carry = dict(batch)
+        if spec.prime is not None:
+            carry = self._apply(spec.prime, carry, -1)
+        step_outs: List[Dict] = []
+        for t in range(spec.steps):
+            carry["cycle_step"] = t
+            for m in spec.order:
+                carry = self._apply(m, carry, t)
+            step_outs.append(dict(carry))
+        return (spec.collect or stack_cycle_steps)(step_outs)
+
+    def _run_cycle_hybrid(self, spec: CycleSpec, batch: Dict,
+                          chunks: int) -> Dict:
+        """Members on disjoint device shares, fine-grained-pipelined over
+        env chunks: while the last member (the simulator) steps chunk i,
+        the first member (generation) acts on chunk i+1.  Ring of
+        channels, one thread per member; at most ``chunks`` carries are
+        ever in flight (the double-buffering bound), and each thread
+        consumes (step, chunk) pairs in a fixed order, so trajectories
+        are bit-identical to the collocated realization when member
+        tasks key their randomness on (cycle_step, env_ids)."""
+        B = self._cycle_batch_size(batch)
+        base_ids = np.asarray(batch.get("env_ids", np.arange(B)))
+        subs: List[Dict] = []
+        for c in range(chunks):
+            lo, hi = c * B // chunks, (c + 1) * B // chunks
+            sub = {k: (v[lo:hi] if isinstance(v, np.ndarray)
+                       and v.ndim >= 1 else v)
+                   for k, v in batch.items()}
+            sub["env_ids"] = base_ids[lo:hi]
+            subs.append(sub)
+
+        k = len(spec.order)
+        # direct construction (not Channel.create): these per-iteration
+        # rings are anonymous; registering them would leak an entry in
+        # the global Channel registry every training iteration
+        rings = [Channel(f"cycle-{i}-{time.time_ns()}")
+                 for i in range(k)]
+        outs: List[List[Optional[Dict]]] = [
+            [None] * spec.steps for _ in range(chunks)]
+        err: List[BaseException] = []
+
+        def close_all():
+            for ch in rings:
+                ch.close()
+
+        def member_loop(idx: int):
+            name = spec.order[idx]
+            inq, outq = rings[idx], rings[(idx + 1) % k]
+            last = idx == k - 1
+            try:
+                for t in range(spec.steps):
+                    for c in range(chunks):
+                        carry = inq.get()
+                        carry["cycle_step"] = t
+                        carry = self._apply(name, carry, t * chunks + c)
+                        if last:
+                            outs[c][t] = dict(carry)
+                            if t < spec.steps - 1:
+                                outq.put(carry)
+                        else:
+                            outq.put(carry)
+            except ChannelClosed:
+                pass
+            except BaseException as e:  # noqa: BLE001
+                err.append(e)
+                close_all()
+
+        # seed the ring: prime each chunk (initial observation), then
+        # feed the first member
+        try:
+            for c, sub in enumerate(subs):
+                carry = (self._apply(spec.prime, sub, -1 - c)
+                         if spec.prime is not None else dict(sub))
+                rings[0].put(carry)
+        except BaseException:
+            close_all()
+            raise
+        threads = [threading.Thread(target=member_loop, args=(i,),
+                                    daemon=True) for i in range(k)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        close_all()
+        if err:
+            raise err[0]
+        chunk_results = [(spec.collect or stack_cycle_steps)(o)
+                         for o in outs]
+        return merge_cycle_chunks(chunk_results)
+
+    def _expand_cycle_members(self, names) -> List[str]:
+        """Schedule leaves name collapsed cycles by their synthetic node
+        name; the REAL workers at a Temporal cut are the members — the
+        switcher must see them or cycle members would silently escape
+        offload/onload discipline."""
+        out: List[str] = []
+        for n in names:
+            out.extend(self.members.get(n, (n,)))
+        return out
+
     def _devices_of(self, sched) -> set:
         out = set()
-        for lf in leaves(sched):
-            w = self.workers.get(lf.worker)
+        for name in self._expand_cycle_members(
+                lf.worker for lf in leaves(sched)):
+            w = self.workers.get(name)
             if w is not None:
                 out |= set(getattr(w, "devices", ()))
         return out

@@ -31,9 +31,27 @@ class Leaf:
     worker: str
     devices: int
     batch: int
+    # Collapsed-cycle realization, RECORDED on the plan (paper §3.4) so
+    # the simulator and the executor honor what the scheduler chose
+    # instead of re-deriving it (and possibly disagreeing):
+    #   None          — plain single-worker leaf;
+    #   "collocated"  — cycle members alternate per step on the leaf's
+    #                   shared devices;
+    #   "hybrid"      — members pinned to disjoint device shares
+    #                   (member_devices, ordered like the sorted member
+    #                   tuple) and fine-grained-pipelined per step over
+    #                   `cycle_chunks` env chunks (double-buffering).
+    cycle_mode: Optional[str] = None
+    member_devices: Optional[Tuple[int, ...]] = None
+    cycle_chunks: int = 2
 
     def pretty(self, indent: str = "") -> str:
-        return f"{indent}{self.worker}[n={self.devices}, b={self.batch}]"
+        extra = ""
+        if self.cycle_mode:
+            share = ("+".join(map(str, self.member_devices))
+                     if self.member_devices else "shared")
+            extra = f", cycle={self.cycle_mode}:{share}"
+        return f"{indent}{self.worker}[n={self.devices}, b={self.batch}{extra}]"
 
 
 @dataclass(frozen=True)
@@ -100,6 +118,28 @@ def leaves(s: Schedule) -> List[Leaf]:
     return leaves(s.s) + leaves(s.t)
 
 
+def cycle_hybrid_time(profiles, members: Sequence[str],
+                      split: Sequence[int], batch: float, frac: float,
+                      chunks: int) -> float:
+    """Cost of the HYBRID realization of a collapsed cycle: members on
+    disjoint device shares, fine-grained-pipelined over ``chunks`` env
+    chunks.  Each member executes every chunk every step, so its device
+    occupancy per step is ``chunks * t(batch/chunks)`` — a member whose
+    cost is FLAT in the chunk size (a CPU-bound sim, Fig. 3) pays the
+    chunk count, which is exactly why collocation wins the LIBERO-like
+    regime; a member whose cost scales with envs (GPU-parallel sim,
+    generation) keeps its total and hides behind the slower side.
+    Steady-state throughput is the slowest member's occupancy; the other
+    members' one-chunk fill is the (tiny) warmup term.  The single cost
+    semantics shared by Scheduler._leaf and Simulator._leaf_time."""
+    C = max(chunks, 1)
+    tc = [profiles[m].time(batch / C, n, frac / C)
+          for m, n in zip(members, split)]
+    occupancy = max(C * t for t in tc)
+    warmup = (sum(tc) - max(tc)) * min(1.0 / max(batch, 1), 1.0)
+    return occupancy + warmup
+
+
 def async_makespan(t_s: float, t_t: float, depth: int,
                    iterations: int) -> float:
     """Analytic horizon makespan of an Async schedule — the recurrence the
@@ -141,6 +181,16 @@ class SchedulerConfig:
     chunk_multiple: int = 1
     # memory capacity per device (bytes); 0 disables feasibility checks
     device_memory: float = 0.0
+    # force the realization of collapsed cycle nodes: None = cheaper of
+    # the two, "collocated" = members alternate on shared devices,
+    # "hybrid" = members on disjoint shares, fine-grained-pipelined
+    # (falls back to collocated when the leaf has fewer devices than
+    # members).  The fixed settings are the paper's Fig.-9 baselines.
+    cycle_mode: Optional[str] = None
+    # env-chunk count of the hybrid realization's per-step pipeline
+    # (2 = double-buffered obs/action queues); priced by
+    # cycle_hybrid_time and recorded on the Leaf for the executor
+    cycle_chunks: int = 2
     # --- async off-policy dimension (cross-iteration overlap) ---
     # candidate staleness bounds K searched by schedule_async; 0 = sync
     async_depths: Tuple[int, ...] = (0, 1, 2, 4)
@@ -278,24 +328,33 @@ class Scheduler:
             prof = self.profiles[node]
             return prof.time(batch, n, frac), Leaf(node, n, batch)
         # Collapsed cycle (paper §3.4): two realizations are costed and the
-        # cheaper chosen —
+        # cheaper chosen (unless cfg.cycle_mode forces one) —
         #  (a) shared devices, members alternate (collocated cycle):
         #      costs add, each member sees all n devices;
         #  (b) disjoint devices, members pipeline against each other
         #      (the paper's hybrid mode for sim<->generation): the cycle
         #      iterates, so throughput is set by the slowest member on its
         #      own device share; cost ~= max_i t_i + warmup of the others.
+        # The winning realization (and its device split) is RECORDED on
+        # the Leaf so the simulator and the executor run exactly what was
+        # costed.
         t_shared = sum(self.profiles[m].time(batch, n, frac)
                        for m in members)
-        best = t_shared
+        C = self.cfg.cycle_chunks
+        t_hybrid, hybrid_split = math.inf, None
         if len(members) >= 2 and n >= len(members):
             for split in self._member_splits(members, n):
-                ts = [self.profiles[m].time(batch, ns, frac)
-                      for m, ns in zip(members, split)]
-                warmup = (sum(ts) - max(ts)) * min(
-                    1.0 / max(batch, 1), 1.0)  # one item's pipeline fill
-                best = min(best, max(ts) + warmup)
-        return best, Leaf(node, n, batch)
+                cand = cycle_hybrid_time(self.profiles, members, split,
+                                         batch, frac, C)
+                if cand < t_hybrid:
+                    t_hybrid, hybrid_split = cand, tuple(split)
+        forced = self.cfg.cycle_mode
+        if hybrid_split is not None and (
+                forced == "hybrid" or (forced is None and t_hybrid < t_shared)):
+            return t_hybrid, Leaf(node, n, batch, cycle_mode="hybrid",
+                                  member_devices=hybrid_split,
+                                  cycle_chunks=C)
+        return t_shared, Leaf(node, n, batch, cycle_mode="collocated")
 
     def _member_splits(self, members, n: int):
         """Small search over device partitions among cycle members."""
@@ -362,7 +421,8 @@ def collocated_schedule(graph: FlowGraph, profiles, n: int, batch: int
         ms = members.get(node, (node,))
         t = sum(profiles[m].time(batch, max(n // len(ms), 1), 1.0)
                 for m in ms)
-        leaf = Leaf(node, n, batch)
+        leaf = Leaf(node, n, batch,
+                    cycle_mode="collocated" if len(ms) > 1 else None)
         if i == len(order) - 1:
             return t, leaf
         t_rest, rest = build(i + 1)
@@ -423,7 +483,9 @@ def disaggregated_schedule(graph: FlowGraph, profiles, n: int, batch: int,
             for w in ms))
 
     def build(i: int) -> Schedule:
-        leaf = Leaf(order[i], shares[i], m)
+        ms_i = members.get(order[i], (order[i],))
+        leaf = Leaf(order[i], shares[i], m,
+                    cycle_mode="collocated" if len(ms_i) > 1 else None)
         if i == len(order) - 1:
             return leaf
         return Pipelined(leaf, build(i + 1), m, shares[i],

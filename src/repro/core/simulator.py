@@ -17,7 +17,13 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.profiler import CostModel
-from repro.core.scheduler import Async, Leaf, Pipelined, Temporal
+from repro.core.scheduler import (
+    Async,
+    Leaf,
+    Pipelined,
+    Temporal,
+    cycle_hybrid_time,
+)
 
 
 @dataclass
@@ -66,9 +72,19 @@ class Simulator:
         ms = self.members.get(leaf.worker, (leaf.worker,))
         if len(ms) == 1:
             return self.profiles[leaf.worker].time(batch, leaf.devices, frac)
-        # collapsed cycle: mirror the scheduler's cheaper-of-two costing
+        # Collapsed cycle: replay the realization RECORDED on the Leaf
+        # (Leaf.cycle_mode / member_devices) — the simulator used to
+        # re-derive the scheduler's cheaper-of-two costing here and could
+        # disagree with what would actually run.
         n = leaf.devices
         t_shared = sum(self.profiles[m].time(batch, n, frac) for m in ms)
+        if leaf.cycle_mode == "collocated":
+            return t_shared
+        if leaf.cycle_mode == "hybrid" and leaf.member_devices:
+            return cycle_hybrid_time(self.profiles, ms, leaf.member_devices,
+                                     batch, frac, leaf.cycle_chunks)
+        # legacy leaf with no recorded realization: cheaper-of-two over
+        # an even split (pre-recording behaviour)
         best = t_shared
         if len(ms) >= 2 and n >= len(ms):
             even = max(n // len(ms), 1)

@@ -15,6 +15,12 @@ from repro.rl.workers import (  # noqa: F401
     RolloutWorker,
     SimulatorWorker,
 )
+from repro.rl.embodied_workflow import (  # noqa: F401
+    EmbodiedAdvantageWorker,
+    EmbodiedIterStats,
+    EmbodiedPPOConfig,
+    EmbodiedPPORunner,
+)
 from repro.rl.rlhf_workflow import (  # noqa: F401
     CriticWorker,
     PPOConfig,

@@ -38,19 +38,49 @@ def reinforce_pp_advantages(rewards: np.ndarray,
 
 
 def gae_advantages(rewards: np.ndarray, values: np.ndarray,
-                   dones: np.ndarray, gamma: float = 0.99,
-                   lam: float = 0.95) -> Tuple[np.ndarray, np.ndarray]:
+                   dones: Optional[np.ndarray] = None, gamma: float = 0.99,
+                   lam: float = 0.95, *,
+                   terminated: Optional[np.ndarray] = None,
+                   truncated: Optional[np.ndarray] = None,
+                   terminal_values: Optional[np.ndarray] = None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
     """Generalized advantage estimation over (T, B) step-major rollouts.
 
     values: (T+1, B) — bootstrap value appended.
-    Returns (advantages (T, B), returns (T, B))."""
+    Returns (advantages (T, B), returns (T, B)).
+
+    Episode ends come in two kinds and they bootstrap differently:
+
+      * ``terminated`` — the MDP truly ended (goal reached, failure
+        state): the future value is genuinely zero, so the TD target
+        drops the ``gamma * V(s')`` bootstrap;
+      * ``truncated`` — the episode was CUT (e.g. an env's ``max_steps``
+        horizon): the state had remaining value, so the target keeps the
+        bootstrap.  Pass ``terminal_values`` (T, B) holding
+        ``V(terminal_obs)`` — the value of the episode's true final
+        observation (``info["terminal_obs"]`` from the env) — because
+        ``values[t+1]`` at a truncation boundary scores the *post-reset*
+        observation of the next episode, not the state that was cut.
+
+    Both kinds reset the advantage carry (no credit flows across
+    episode boundaries).  Legacy positional ``dones`` treats every end
+    as terminated — the timeout-as-terminal bias this signature exists
+    to remove."""
+    if terminated is None:
+        terminated = dones if dones is not None else np.zeros_like(rewards)
+    if truncated is None:
+        truncated = np.zeros_like(terminated)
     T, B = rewards.shape
     adv = np.zeros((T, B), np.float32)
     last = np.zeros((B,), np.float32)
     for t in reversed(range(T)):
-        notdone = 1.0 - dones[t]
-        delta = rewards[t] + gamma * values[t + 1] * notdone - values[t]
-        last = delta + gamma * lam * notdone * last
+        v_next = values[t + 1]
+        if terminal_values is not None:
+            v_next = np.where(truncated[t] > 0, terminal_values[t], v_next)
+        notterm = 1.0 - terminated[t]
+        ends = np.clip(terminated[t] + truncated[t], 0.0, 1.0)
+        delta = rewards[t] + gamma * v_next * notterm - values[t]
+        last = delta + gamma * lam * (1.0 - ends) * last
         adv[t] = last
     returns = adv + values[:-1]
     return adv, returns

@@ -59,11 +59,18 @@ class WorkflowRunner:
     def __init__(self, *, iterations: int, batch_size: int,
                  mode: str = "auto",
                  profile_batches: Sequence[int] = (8, 32),
-                 cluster: Optional[Cluster] = None):
+                 cluster: Optional[Cluster] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0):
         self.iterations = iterations
         self.batch_size = batch_size
         self.mode = mode
         self.profile_batches = tuple(profile_batches)
+        # periodic trainer-state checkpointing (train.checkpoint): save
+        # every `checkpoint_every` iterations into `checkpoint_dir` and
+        # auto-resume from it when run() starts
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
         self.cluster = cluster or Cluster(num_nodes=1, devices_per_node=8)
         self.workers: Dict[str, Any] = self.build_workers()
         self.task_fns: Dict[str, Callable] = self.build_task_fns()
@@ -93,6 +100,12 @@ class WorkflowRunner:
 
     def scheduler_config(self) -> SchedulerConfig:
         return SchedulerConfig(total_batch=self.batch_size)
+
+    def cycle_specs(self) -> Dict[str, Any]:
+        """{collapsed node name: core.pipeline.CycleSpec} for workflows
+        whose graph contains cycles (e.g. embodied sim<->generation);
+        the executor needs them to run a cycle Leaf as a closed loop."""
+        return {}
 
     def _record_stats(self, it: int, wall: float, out) -> Any:
         raise NotImplementedError
@@ -206,16 +219,52 @@ class WorkflowRunner:
         self._sync_weights()
         batch = self.make_batch()
         out = self.controller.execute(
-            self.plan, self.workers, self.task_fns, batch)
+            self.plan, self.workers, self.task_fns, batch,
+            cycle_specs=self.cycle_specs())
         out = self.post_execute(out)
         wall = time.perf_counter() - t0
         return self._record_stats(it, wall, out)
 
+    # ------------------------------------------------------------------
+    # periodic trainer checkpointing + resume (train.checkpoint)
+    # ------------------------------------------------------------------
+    def _trainer_state(self) -> Dict[str, Any]:
+        return {"params": self.actor.get_state("params"),
+                "opt": self.actor.get_state("opt")}
+
+    def save_trainer_checkpoint(self, it: int) -> None:
+        from repro.train.checkpoint import save_checkpoint
+        save_checkpoint(self.checkpoint_dir, self._trainer_state(),
+                        step=it + 1,
+                        metadata={"workflow": type(self).__name__})
+
+    def resume_trainer_checkpoint(self) -> int:
+        """Restore actor params + optimizer state from checkpoint_dir if
+        one exists; returns the iteration to resume from (0 = fresh)."""
+        from repro.train.checkpoint import checkpoint_exists, load_checkpoint
+        if not self.checkpoint_dir or not checkpoint_exists(
+                self.checkpoint_dir):
+            return 0
+        tree, step, _ = load_checkpoint(self.checkpoint_dir,
+                                        self._trainer_state())
+        self.actor.set_state("params", tree["params"])
+        self.actor.set_state("opt", tree["opt"])
+        return step
+
     def run_loop(self, verbose: bool) -> None:
-        for it in range(self.iterations):
+        start = self.resume_trainer_checkpoint()
+        if start and verbose:
+            print(f"resumed trainer state from {self.checkpoint_dir} "
+                  f"at iteration {start}"
+                  + (" (nothing left to run)"
+                     if start >= self.iterations else ""))
+        for it in range(start, self.iterations):
             st = self.run_iteration(it)
             if verbose:
                 self.log_iteration(st)
+            if (self.checkpoint_dir and self.checkpoint_every
+                    and (it + 1) % self.checkpoint_every == 0):
+                self.save_trainer_checkpoint(it)
 
     def run(self, verbose: bool = True) -> List[Any]:
         self.profile()

@@ -47,9 +47,20 @@ class RolloutWorker(Worker):
                  top_k: int = 0, top_p: float = 1.0,
                  seed: int = 0, devices: Sequence[int] = (),
                  process_index: int = 0, engine: str = "auto",
-                 max_batch: int = 8, page_size: int = 16):
+                 max_batch: int = 8, page_size: int = 16,
+                 action_range: Optional[tuple] = None,
+                 act_latency: float = 0.0,
+                 act_latency_per_env: float = 0.0):
         super().__init__(name, devices=devices, process_index=process_index)
         self.cfg = cfg
+        # [lo, hi) vocab window of action tokens for the closed-loop
+        # `act` path (embodied cycles); None for pure text workflows
+        self.action_range = action_range
+        # artificial act-path latency mimicking a VLA-scale policy
+        # forward (the tiny repro policy is ~free; the paper's embodied
+        # generation side is not): flat per call + per env acted on
+        self.act_latency = act_latency
+        self.act_latency_per_env = act_latency_per_env
         if engine == "auto":
             engine = ("paged" if cfg.kind == DENSE
                       and not cfg.sliding_window else "static")
@@ -65,6 +76,11 @@ class RolloutWorker(Worker):
                                  temperature=temperature, top_k=top_k,
                                  top_p=top_p)
         self.key = jax.random.PRNGKey(seed + process_index)
+        # fixed base key for the closed-loop act path: randomness is
+        # derived per (cycle_step, env_id) by fold_in, NOT consumed
+        # sequentially, so any chunking of the env batch (the hybrid
+        # cycle realization) draws identical actions
+        self._act_key = jax.random.PRNGKey(seed ^ 0x5EED)
         self.register_state("params", None)
 
     def bind_devices(self, devices: Sequence[int]) -> None:
@@ -109,6 +125,52 @@ class RolloutWorker(Worker):
         if isinstance(self.engine, PagedEngine):
             return self.engine.pop_request_records()
         return []
+
+    # closed-loop action path (the embodied sim<->generation cycle):
+    # one constrained sampling step per env step, through the engine
+    def _act_engine(self) -> Engine:
+        if isinstance(self.engine, Engine):
+            return self.engine
+        # the paged engine has no single-step act path; acting is a
+        # prefill-only op, so a static engine (explicit params, no
+        # duplicated state) covers it
+        if not hasattr(self, "_static_act_engine"):
+            self._static_act_engine = Engine(self.cfg, max_new_tokens=1)
+        return self._static_act_engine
+
+    def act(self, chunk: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Per-step action sampling for the cycle executor.  Consumes
+        ``prompt_tokens`` (B, S) plus the executor-injected
+        ``cycle_step`` / ``env_ids``; emits ``action_tokens``,
+        ``action_logprobs`` and env-space ``actions``."""
+        assert self.action_range is not None, \
+            "RolloutWorker.act needs action_range=(lo, hi)"
+        params = self.get_state("params")
+        assert params is not None, "rollout weights not initialized"
+        lo, hi = self.action_range
+        prompts = np.asarray(chunk["prompt_tokens"])
+        if self.act_latency or self.act_latency_per_env:
+            time.sleep(self.act_latency
+                       + self.act_latency_per_env * prompts.shape[0])
+        ids = np.asarray(chunk.get("env_ids", np.arange(prompts.shape[0])))
+        step = int(chunk.get("cycle_step", 0))
+        # key on (rollout_round, cycle_step, env_id): the round keeps
+        # exploration noise FRESH across training iterations (cycle_step
+        # restarts at 0 every rollout), while the per-env fold keeps
+        # sampling invariant to how the env batch is chunked
+        rnd = chunk.get("rollout_round", 0)
+        rnd = int(np.asarray(rnd).reshape(-1)[0]) if np.ndim(rnd) else int(rnd)
+        base = jax.random.fold_in(jax.random.fold_in(self._act_key, rnd),
+                                  step)
+        env_keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
+            jnp.asarray(ids, jnp.int32))
+        tok, lp = self._act_engine().act(params, prompts, env_keys,
+                                         action_lo=lo, action_hi=hi)
+        out = dict(chunk)
+        out["action_tokens"] = np.asarray(tok)
+        out["action_logprobs"] = np.asarray(lp)
+        out["actions"] = out["action_tokens"] - lo
+        return out
 
 
 class InferenceWorker(Worker):
@@ -219,26 +281,31 @@ class SimulatorWorker(Worker):
         self.env = VecReachEnv(env_cfg, seed=seed + process_index)
         self.env_cfg = env_cfg
 
-    def rollout_steps(self, chunk: Dict[str, Any]) -> Dict[str, Any]:
-        """Step the sim with the provided per-step action callback results.
+    def step_env(self, chunk: Dict[str, Any]) -> Dict[str, Any]:
+        """Closed-loop per-step task for the cycle executor (replaces the
+        old open-loop precomputed-actions ``rollout_steps``).
 
-        chunk: {"actions": (T, num_envs) int} -> trajectories.
-        """
-        actions = chunk["actions"]
-        T = actions.shape[0]
-        obs_list, rew_list, done_list = [self.env.observe()], [], []
-        succ = 0
-        for t in range(T):
-            obs, rew, done, info = self.env.step(actions[t])
-            obs_list.append(obs)
-            rew_list.append(rew)
-            done_list.append(done)
-            succ += int(info["success"].sum())
+        Without ``actions`` in the chunk this is the loop's PRIME call:
+        it returns the current observation only.  With ``actions``
+        (B,) it steps the env subset named by ``env_ids`` (or all envs),
+        returning the post-reset obs the next action must be computed
+        from, the step's reward, and the terminated/truncated split plus
+        ``terminal_obs`` that correct GAE bootstrapping needs."""
         out = dict(chunk)
-        out["obs"] = np.stack(obs_list)  # (T+1, N, obs_dim)
-        out["rewards"] = np.stack(rew_list)
-        out["dones"] = np.stack(done_list)
-        out["successes"] = succ
+        ids = chunk.get("env_ids")
+        ids = np.asarray(ids) if ids is not None else None
+        if "actions" not in chunk:
+            out["obs"] = self.env.observe(ids)
+            return out
+        obs, rew, done, info = self.env.step(
+            np.asarray(chunk["actions"]), ids)
+        out["obs"] = obs
+        out["rewards"] = rew
+        out["dones"] = done
+        out["terminated"] = info["terminated"].astype(np.float32)
+        out["truncated"] = info["truncated"].astype(np.float32)
+        out["terminal_obs"] = info["terminal_obs"]
+        out["successes"] = int(info["success"].sum())
         return out
 
     def observe(self, _chunk: Optional[Dict] = None) -> Dict[str, Any]:

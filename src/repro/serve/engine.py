@@ -84,6 +84,7 @@ class Engine:
         self.eos = eos_token
         self.pad = pad_token
         self._generate = jax.jit(self._generate_impl, static_argnames=("B", "S"))
+        self._act = None  # lazily jitted closed-loop action path
 
     # ------------------------------------------------------------------
     def _generate_impl(self, params, prompt_tokens, prompt_lens, key, *,
@@ -133,6 +134,35 @@ class Engine:
         if prompt_lens is None:
             prompt_lens = jnp.full((B,), S, jnp.int32)
         return self._generate(params, prompt_tokens, prompt_lens, key, B=B, S=S)
+
+    # ------------------------------------------------------------------
+    # per-step constrained action sampling (the embodied cycle's path)
+    # ------------------------------------------------------------------
+    def _act_impl(self, params, prompt_tokens, env_keys, *, lo: int,
+                  hi: int):
+        logits, _ = M.forward(params, self.cfg, prompt_tokens)
+        last = logits[:, -1].astype(jnp.float32)
+        idx = jnp.arange(last.shape[-1])
+        last = jnp.where((idx >= lo) & (idx < hi), last, NEG_INF)
+        # one key PER ROW: sampling is invariant to how the env batch is
+        # chunked (the hybrid cycle realization splits it), so collocated
+        # and hybrid execution draw identical actions
+        toks = jax.vmap(jax.random.categorical)(env_keys, last)
+        lse = jax.nn.logsumexp(last, axis=-1)
+        lps = jnp.take_along_axis(last, toks[:, None], axis=-1)[:, 0] - lse
+        return toks.astype(jnp.int32), lps.astype(jnp.float32)
+
+    def act(self, params, prompt_tokens, env_keys, *, action_lo: int,
+            action_hi: int):
+        """One closed-loop policy step: a single prefill forward, logits
+        masked to the action-token window ``[action_lo, action_hi)``,
+        per-row categorical sampling under explicit per-env keys.
+        Returns (action_tokens (B,), behaviour logprobs (B,))."""
+        if self._act is None:
+            self._act = jax.jit(self._act_impl,
+                                static_argnames=("lo", "hi"))
+        return self._act(params, jnp.asarray(prompt_tokens), env_keys,
+                         lo=action_lo, hi=action_hi)
 
 
 # ===========================================================================

@@ -39,11 +39,26 @@ def _unflatten_into(template, flat: Dict[str, np.ndarray]):
     return rec("", template)
 
 
+def _escape_key(k: str) -> str:
+    """Invertible path-separator escaping (JSON-pointer style): ``~`` is
+    the escape char, so a literal ``~`` becomes ``~0`` before ``/``
+    becomes ``~1``.  The previous scheme — ``k.replace("/", "|")``
+    inverted by ``k.replace("|", "/")`` — silently corrupted any state
+    key containing a literal ``|`` on load."""
+    return k.replace("~", "~0").replace("/", "~1")
+
+
+def _unescape_key(k: str) -> str:
+    # decode ~1 before ~0 (the JSON-pointer order): an original "~1"
+    # escapes to "~01", which must NOT decode its tail as a separator
+    return k.replace("~1", "/").replace("~0", "~")
+
+
 def save_checkpoint(path: str, tree: Any, step: int = 0,
                     metadata: Optional[Dict[str, Any]] = None) -> None:
     os.makedirs(path, exist_ok=True)
     flat = _flatten(tree)
-    np.savez(os.path.join(path, "arrays.npz"), **{k.replace("/", "|"): v
+    np.savez(os.path.join(path, "arrays.npz"), **{_escape_key(k): v
                                                   for k, v in flat.items()})
     manifest = {"step": step, "keys": list(flat.keys()),
                 "metadata": metadata or {}}
@@ -51,10 +66,24 @@ def save_checkpoint(path: str, tree: Any, step: int = 0,
         f.write(msgpack.packb(manifest))
 
 
+def checkpoint_exists(path: str) -> bool:
+    return (os.path.exists(os.path.join(path, "manifest.msgpack"))
+            and os.path.exists(os.path.join(path, "arrays.npz")))
+
+
 def load_checkpoint(path: str, template: Any) -> Tuple[Any, int, Dict]:
     with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
     with np.load(os.path.join(path, "arrays.npz")) as z:
-        flat = {k.replace("|", "/"): z[k] for k in z.files}
+        files = set(z.files)
+        flat: Dict[str, np.ndarray] = {}
+        for k in manifest["keys"]:
+            esc = _escape_key(k)
+            if esc in files:
+                flat[k] = z[esc]
+            elif k.replace("/", "|") in files:  # legacy "|" checkpoints
+                flat[k] = z[k.replace("/", "|")]
+            else:
+                raise KeyError(f"checkpoint {path} is missing array {k!r}")
     tree = _unflatten_into(template, flat)
     return tree, manifest["step"], manifest.get("metadata", {})

@@ -1,0 +1,258 @@
+"""Embodied cycle execution: realization parity, plan honoring, env
+terminated/truncated semantics, GAE truncation bootstrap, checkpoint
+wiring, and a tiny e2e learning run."""
+import numpy as np
+import pytest
+
+from repro.core import CycleSpec, ExecutionFlowManager, cycle_node_name
+from repro.core.scheduler import Leaf, leaves
+from repro.rl import (
+    EmbodiedPPOConfig,
+    EmbodiedPPORunner,
+    EnvConfig,
+    VecReachEnv,
+    gae_advantages,
+)
+
+
+def tiny_runner(mode: str, **kw) -> EmbodiedPPORunner:
+    cfg = dict(num_envs=8, horizon=4, iterations=1, mode=mode, seed=0,
+               profile_batches=(4, 8))
+    cfg.update(kw)
+    return EmbodiedPPORunner(EmbodiedPPOConfig(**cfg))
+
+
+def run_one(runner: EmbodiedPPORunner):
+    runner.profile()
+    runner.plan_execution()
+    runner._sync_weights()
+    return runner.controller.execute(
+        runner.plan, runner.workers, runner.task_fns, runner.make_batch(),
+        cycle_specs=runner.cycle_specs())
+
+
+# ---------------------------------------------------------------------------
+# env semantics (satellite bugfixes)
+# ---------------------------------------------------------------------------
+def test_env_step_returns_post_reset_obs_and_terminal_obs():
+    """Regression: step used to return the finished episode's terminal
+    observation, so the next action (and the GAE bootstrap value) was
+    computed from a dead state.  Now the returned obs is post-reset and
+    the true final obs rides in info["terminal_obs"]."""
+    env = VecReachEnv(EnvConfig(num_envs=4, max_steps=1), seed=0)
+    obs, _, done, info = env.step(np.zeros(4, np.int64))
+    assert done.all()  # max_steps=1: every episode ends at the first step
+    # post-reset: step counters are 0 again, so the step_frac feature
+    # (obs[:, 3]) is 0; the terminal obs was taken at steps=1 -> frac 1
+    np.testing.assert_allclose(obs[:, 3], 0.0)
+    np.testing.assert_allclose(info["terminal_obs"][:, 3], 1.0)
+    # and the returned obs matches what the env would observe NOW
+    np.testing.assert_array_equal(obs, env.observe())
+
+
+def test_env_splits_terminated_from_truncated():
+    # huge eps: every step reaches the goal -> terminated, not truncated
+    env = VecReachEnv(EnvConfig(num_envs=4, max_steps=8, eps=1e9), seed=0)
+    _, _, done, info = env.step(np.zeros(4, np.int64))
+    assert done.all()
+    assert info["terminated"].all() and not info["truncated"].any()
+    # tiny arena horizon: timeouts are truncations
+    env = VecReachEnv(EnvConfig(num_envs=4, max_steps=1, eps=1e-9), seed=0)
+    _, _, done, info = env.step(np.zeros(4, np.int64))
+    assert done.all()
+    assert info["truncated"].all() and not info["terminated"].any()
+
+
+def test_env_subset_stepping_matches_full_batch():
+    """Per-env RNG: stepping halves separately consumes exactly the same
+    random streams as stepping the full batch — the determinism the
+    hybrid cycle realization's parity rests on."""
+    a = VecReachEnv(EnvConfig(num_envs=8, max_steps=2), seed=3)
+    b = VecReachEnv(EnvConfig(num_envs=8, max_steps=2), seed=3)
+    rng = np.random.default_rng(0)
+    for _ in range(6):  # several steps => several auto-resets
+        acts = rng.integers(0, 9, size=8)
+        obs_a, rew_a, done_a, _ = a.step(acts)
+        o1, r1, d1, _ = b.step(acts[:4], np.arange(4))
+        o2, r2, d2, _ = b.step(acts[4:], np.arange(4, 8))
+        np.testing.assert_array_equal(obs_a, np.concatenate([o1, o2]))
+        np.testing.assert_array_equal(rew_a, np.concatenate([r1, r2]))
+        np.testing.assert_array_equal(done_a, np.concatenate([d1, d2]))
+
+
+# ---------------------------------------------------------------------------
+# GAE terminated/truncated split (satellite bugfix)
+# ---------------------------------------------------------------------------
+def test_gae_truncation_bootstraps_termination_does_not():
+    rewards = np.array([[1.0]], np.float32)
+    values = np.array([[0.0], [5.0]], np.float32)  # bootstrap value 5
+    term = np.array([[1.0]], np.float32)
+    trunc = np.array([[1.0]], np.float32)
+    zeros = np.zeros_like(term)
+    adv_term, _ = gae_advantages(rewards, values, gamma=1.0, lam=1.0,
+                                 terminated=term, truncated=zeros)
+    adv_trunc, _ = gae_advantages(rewards, values, gamma=1.0, lam=1.0,
+                                  terminated=zeros, truncated=trunc)
+    assert adv_term[0, 0] == pytest.approx(1.0)  # bootstrap dropped
+    assert adv_trunc[0, 0] == pytest.approx(6.0)  # bootstrapped through
+    # the truncated step should bootstrap with the TERMINAL obs value,
+    # not the post-reset values[t+1]
+    adv_tv, _ = gae_advantages(rewards, values, gamma=1.0, lam=1.0,
+                               terminated=zeros, truncated=trunc,
+                               terminal_values=np.array([[2.0]], np.float32))
+    assert adv_tv[0, 0] == pytest.approx(3.0)
+    # both kinds of end reset the advantage carry
+    r2 = np.array([[1.0], [7.0]], np.float32)
+    v2 = np.zeros((3, 1), np.float32)
+    adv2, _ = gae_advantages(r2, v2, gamma=1.0, lam=1.0,
+                             terminated=np.zeros((2, 1), np.float32),
+                             truncated=np.array([[1.0], [0.0]], np.float32))
+    assert adv2[0, 0] == pytest.approx(1.0)  # no bleed from t=1
+    # legacy positional dones == terminated (old call sites unchanged)
+    adv_legacy, _ = gae_advantages(rewards, values, term, gamma=1.0, lam=1.0)
+    np.testing.assert_allclose(adv_legacy, adv_term)
+
+
+# ---------------------------------------------------------------------------
+# cycle execution parity + plan honoring (tentpole)
+# ---------------------------------------------------------------------------
+def test_cycle_realizations_produce_identical_trajectories():
+    """Collocated and hybrid realizations of the same seeded workflow
+    must emit bit-identical trajectories: actions are sampled with
+    per-(step, env) keys and the env's RNG is per-env, so chunked
+    pipelined execution draws the same randomness as full-batch
+    alternation."""
+    out_c = run_one(tiny_runner("collocated"))
+    out_h = run_one(tiny_runner("hybrid"))
+    for k in ("action_tokens", "rewards", "terminated", "truncated",
+              "obs", "terminal_obs", "tokens", "dones"):
+        np.testing.assert_array_equal(
+            np.asarray(out_c[k]), np.asarray(out_h[k]), err_msg=k)
+    np.testing.assert_allclose(out_c["action_logprobs"],
+                               out_h["action_logprobs"], atol=1e-5)
+    assert out_c["successes"] == out_h["successes"]
+
+
+def test_forced_modes_recorded_on_leaf_and_honored_by_executor():
+    for mode in ("collocated", "hybrid"):
+        runner = tiny_runner(mode)
+        run_one(runner)
+        cyc = [lf for lf in leaves(runner.plan.schedule)
+               if lf.worker.startswith("cycle(")]
+        assert len(cyc) == 1
+        assert cyc[0].cycle_mode == mode
+        log = runner.controller.last_cycle_log
+        assert len(log) == 1
+        node, ran_mode, member_devices, chunks = log[0]
+        assert ran_mode == mode  # the executor ran the RECORDED mode
+        assert member_devices == cyc[0].member_devices
+        if mode == "hybrid":
+            assert member_devices is not None
+            assert sum(member_devices) <= cyc[0].devices
+            assert chunks == cyc[0].cycle_chunks
+
+
+def test_executor_honors_leaf_not_rederivation():
+    """Hand the executor two plans differing ONLY in the Leaf's recorded
+    realization; it must run each as recorded — there is no cost-model
+    re-derivation in the execution path."""
+    runner = tiny_runner("auto")
+    runner.profile()
+    runner.plan_execution()
+    name = cycle_node_name(("policy_gen", "simulator"))
+    members = {name: ("policy_gen", "simulator")}
+    for leaf, want in (
+            (Leaf(name, 4, 8, cycle_mode="collocated"), "collocated"),
+            (Leaf(name, 4, 8, cycle_mode="hybrid",
+                  member_devices=(2, 2)), "hybrid")):
+        mgr = ExecutionFlowManager(runner.workers, runner.task_fns,
+                                   members=members,
+                                   cycle_specs=runner.cycle_specs())
+        out = mgr.run(leaf, runner.make_batch())
+        assert mgr.cycle_log[0][1] == want
+        assert out["rewards"].shape == (runner.rl.horizon, 8)
+
+
+def test_cycle_placement_binds_member_workers():
+    """The plan's placement column names the MEMBER workers (the real
+    ones the PlacementManager can bind), with disjoint shares under the
+    hybrid realization and a shared slice under collocation."""
+    r_h = tiny_runner("hybrid")
+    r_h.profile()
+    r_h.plan_execution()
+    pl = r_h.plan.placement
+    assert "policy_gen" in pl and "simulator" in pl
+    assert not set(pl["policy_gen"]) & set(pl["simulator"])  # disjoint
+    r_c = tiny_runner("collocated")
+    r_c.profile()
+    r_c.plan_execution()
+    pl = r_c.plan.placement
+    assert pl["policy_gen"] == pl["simulator"]  # time-shared slice
+
+
+def test_simulator_replays_recorded_realization():
+    """The event simulator prices a cycle leaf by its RECORDED
+    realization, not a re-derived cheaper-of-two."""
+    from repro.core import Simulator
+    from repro.core.profiler import CostModel
+
+    profiles = {
+        "sim": CostModel("sim", base_time=1.0, scalable=False,
+                         max_useful_devices=1),
+        "gen": CostModel("gen", base_time=0.0, slope_time=0.01),
+    }
+    members = {"cycle(gen+sim)": ("gen", "sim")}
+    sim = Simulator(profiles, members)
+    col = Leaf("cycle(gen+sim)", 4, 16, cycle_mode="collocated")
+    hyb = Leaf("cycle(gen+sim)", 4, 16, cycle_mode="hybrid",
+               member_devices=(3, 1), cycle_chunks=2)
+    t_col = sim.run(col, 16).makespan
+    t_hyb = sim.run(hyb, 16).makespan
+    # flat-cost sim: hybrid pays the chunk count (2 x 1.0s), collocation
+    # pays one step (1.0s + gen) — the simulator must NOT silently
+    # substitute the cheaper realization
+    assert t_hyb > t_col
+    assert t_col == pytest.approx(1.0 + 0.01 * 16 / 4)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint wiring (satellite): periodic save + resume through the runner
+# ---------------------------------------------------------------------------
+def test_runner_checkpoint_save_and_resume(tmp_path):
+    import jax
+
+    ck = str(tmp_path / "ck")
+    r1 = tiny_runner("collocated", iterations=2, checkpoint_dir=ck,
+                     checkpoint_every=1)
+    r1.profile()
+    r1.plan_execution()
+    r1.run_loop(verbose=False)
+    assert len(r1.stats) == 2
+    r2 = tiny_runner("collocated", iterations=2, checkpoint_dir=ck,
+                     checkpoint_every=1)
+    r2.profile()
+    r2.plan_execution()
+    start = r2.resume_trainer_checkpoint()
+    assert start == 2  # resumes after the last completed iteration
+    p1 = jax.tree_util.tree_leaves(r1.actor.get_state("params"))
+    p2 = jax.tree_util.tree_leaves(r2.actor.get_state("params"))
+    for a, b in zip(p1, p2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# tiny e2e: the runner-driven loop actually learns
+# ---------------------------------------------------------------------------
+def test_embodied_runner_learns_above_random():
+    """30 iterations through the full runtime must lift the success rate
+    well above the random-policy baseline (~0.05 successes/env on this
+    horizon)."""
+    rl = EmbodiedPPOConfig(num_envs=32, horizon=12, iterations=30,
+                           mode="auto", seed=0, profile_batches=(16, 32))
+    runner = EmbodiedPPORunner(rl)
+    runner.run(verbose=False)
+    curve = runner.success_curve()
+    first = float(np.mean(curve[:5]))
+    last = float(np.mean(curve[-10:]))
+    assert last > first + 0.1, (first, last)
+    assert last > 0.2, last  # far above the ~0.05 random baseline

@@ -168,6 +168,48 @@ def test_checkpoint_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+def test_checkpoint_roundtrip_adversarial_keys(tmp_path):
+    """Regression: keys were sanitized with k.replace('/', '|') and
+    inverted with the reverse replace on load — any state key containing
+    a literal '|' (or the escape char itself) silently corrupted.  The
+    JSON-pointer-style escaping must round-trip them all."""
+    tree = {
+        "plain": np.arange(3, dtype=np.float32),
+        "pipe|separated": np.ones(2, np.float32),
+        "ti~lde": np.zeros(2, np.float32),
+        "tricky~1combo": np.full(2, 7.0, np.float32),
+        "even~0|~1worse": np.full(2, -1.0, np.float32),
+        "nested": {"a|b": np.arange(4, dtype=np.int32)},
+    }
+    save_checkpoint(str(tmp_path / "ck"), tree, step=1)
+    got, step, _ = load_checkpoint(str(tmp_path / "ck"), tree)
+    assert step == 1
+    for x, y in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_loads_legacy_pipe_escaped_arrays(tmp_path):
+    """Checkpoints written by the old '|' scheme (no '|' in keys) must
+    still load through the manifest-driven fallback."""
+    import os
+
+    import msgpack
+
+    tree = {"layer": {"w": np.arange(4, dtype=np.float32)}}
+    path = str(tmp_path / "legacy")
+    os.makedirs(path)
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{"/layer/w".replace("/", "|"): tree["layer"]["w"]})
+    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb({"step": 3, "keys": ["/layer/w"],
+                               "metadata": {}}))
+    got, step, _ = load_checkpoint(path, tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(got["layer"]["w"]),
+                                  tree["layer"]["w"])
+
+
 # ---------------------------------------------------------------------------
 # data
 # ---------------------------------------------------------------------------
