@@ -8,7 +8,7 @@ import time
 
 from benchmarks.common import emit
 from repro.core import FlowGraph, Scheduler, SchedulerConfig
-from repro.core.profiler import CostModel
+from repro.core.profiler import CostModel, paper_like_profiles
 from repro.core.scheduler import Leaf, Pipelined, Temporal
 
 
@@ -68,6 +68,54 @@ def _random_schedule_time(sch, g, n, M, rng) -> float:
     return ts + tt + (M // m - 1) * max(ts, tt)
 
 
+def grpo_graph() -> FlowGraph:
+    g = FlowGraph()
+    for w in ("rollout", "inference", "training"):
+        g.add_worker(w)
+    g.add_edge("rollout", "inference")
+    g.add_edge("inference", "training")
+    return g
+
+
+def scale() -> dict:
+    """Scale-out planning cost: flat Algorithm 1 at 64 devices vs the
+    hierarchical (host-grouped) planner at 256-1024.  The hierarchical
+    walls must stay sub-second — this is what makes re-planning after a
+    host failure cheap enough to sit on the recovery path — and CI
+    enforces hier@512 < flat@64."""
+    profiles = paper_like_profiles()
+    g = grpo_graph()
+    base = dict(total_batch=2048, device_quantum=1,
+                granularity_divisors=(1, 2, 4, 8, 16, 32))
+    out: dict = {}
+
+    t0 = time.perf_counter()
+    est_flat, _ = Scheduler(profiles, SchedulerConfig(
+        **base, hierarchical=False)).schedule(g, 64, 2048)
+    out["flat_64_wall_s"] = time.perf_counter() - t0
+    emit("scheduler.scale.flat64", out["flat_64_wall_s"] * 1e6,
+         f"est={est_flat:.3f}s")
+
+    # estimate-quality check at a size both planners can handle: the
+    # coarse inter-host splits should cost only a small estimate penalty
+    est_hier64, _ = Scheduler(profiles, SchedulerConfig(
+        **base, hierarchical=True, host_group_size=8)).schedule(g, 64, 2048)
+    out["est_ratio_64"] = est_hier64 / est_flat
+    emit("scheduler.scale.est_quality", 0.0,
+         f"hier/flat_est_ratio@64={out['est_ratio_64']:.4f}")
+
+    for n in (256, 512, 1024):
+        sch = Scheduler(profiles, SchedulerConfig(
+            **base, hierarchical=True, host_group_size=8))
+        t0 = time.perf_counter()
+        est, _ = sch.schedule(g, n, 2048)
+        wall = time.perf_counter() - t0
+        out[f"hier_{n}_wall_s"] = wall
+        emit(f"scheduler.scale.hier{n}", wall * 1e6,
+             f"est={est:.3f}s;cuts={sch.evaluated_cuts}")
+    return out
+
+
 def run() -> None:
     wins, ties = 0, 0
     for k in (3, 4, 5):
@@ -92,4 +140,18 @@ def run() -> None:
 
 
 if __name__ == "__main__":
-    run()
+    import json
+    import sys
+
+    if "--scale" in sys.argv or "--json" in sys.argv:
+        stats = scale()
+    else:
+        run()
+        stats = scale()
+    if "--json" in sys.argv:
+        i = sys.argv.index("--json")
+        if i + 1 < len(sys.argv):
+            with open(sys.argv[i + 1], "w") as f:
+                json.dump(stats, f, indent=2)
+        else:
+            print(json.dumps(stats))

@@ -7,6 +7,12 @@ from repro.core.channel import (  # noqa: F401
     VersionedItem,
 )
 from repro.core.controller import Controller, ExecutionPlan  # noqa: F401
+from repro.core.faults import (  # noqa: F401
+    FaultInjector,
+    FaultSpec,
+    HeartbeatMonitor,
+    InjectedFault,
+)
 from repro.core.flowgraph import (  # noqa: F401
     FlowGraph,
     GraphTracer,

@@ -63,13 +63,17 @@ class ExecutionPlan:
 class Controller:
     def __init__(self, cluster: Cluster,
                  profiles: Optional[Dict[str, CostModel]] = None,
-                 scheduler_cfg: Optional[SchedulerConfig] = None):
+                 scheduler_cfg: Optional[SchedulerConfig] = None,
+                 heartbeat: Optional[Any] = None):
         self.cluster = cluster
         self.profiles = profiles or {}
         self.scheduler_cfg = scheduler_cfg or SchedulerConfig()
         self.tracer = GraphTracer()
         self.router = global_router()
         self.placement_manager = PlacementManager(cluster)
+        # optional core.faults.HeartbeatMonitor — beaten around every task
+        # call by the executor so a silent hang is detectable
+        self.heartbeat = heartbeat
         self._switcher: Optional[ContextSwitcher] = None
         self._failed: List[WorkerFailure] = []
         self._kill = threading.Event()
@@ -89,13 +93,25 @@ class Controller:
     def check_alive(self) -> None:
         if self._kill.is_set():
             raise self._failed[0]
+        if self.heartbeat is not None:
+            self.heartbeat.check()
+
+    def reset_failures(self) -> None:
+        """Clear failure state after recovery re-established the run."""
+        self._failed = []
+        self._kill.clear()
+        if self.heartbeat is not None:
+            self.heartbeat.reset()
 
     # ------------------------------------------------------------------
     # M2Flow planning
     # ------------------------------------------------------------------
     def plan(self, graph: FlowGraph, *, total_batch: int,
              mode: str = "auto") -> ExecutionPlan:
-        n = self.cluster.num_devices
+        # plan over LIVE devices only: after a host failure the surviving
+        # devices are the whole universe (recovery re-plans through here)
+        avail = self.cluster.available_devices()
+        n = len(avail)
         if mode == "collocated":
             t, sched = collocated_schedule(graph, self.profiles, n, total_batch)
         elif mode == "disaggregated":
@@ -105,7 +121,7 @@ class Controller:
             sch = Scheduler(self.profiles, self.scheduler_cfg)
             t, sched = sch.schedule(graph, n, total_batch)
         members = self._cycle_members(graph)
-        placement = self._place(sched, list(range(n)), members)
+        placement = self._place(sched, avail, members)
         return ExecutionPlan(schedule=sched, est_time=t, placement=placement,
                              mode=mode, members=members)
 
@@ -117,14 +133,15 @@ class Controller:
         ``est_time`` is the estimated wall-clock makespan of the whole
         ``iterations`` horizon (schedule_async selects with a freshness
         tax but always returns the untaxed time)."""
-        n = self.cluster.num_devices
+        avail = self.cluster.available_devices()
+        n = len(avail)
         sch = Scheduler(self.profiles, self.scheduler_cfg)
         t, sched = sch.schedule_async(graph, n, total_batch,
                                       iterations=iterations, depths=depths)
         mode = (f"async-{sched.depth}" if isinstance(sched, Async)
                 else "auto")
         members = self._cycle_members(graph)
-        placement = self._place(sched, list(range(n)), members)
+        placement = self._place(sched, avail, members)
         return ExecutionPlan(schedule=sched, est_time=t, placement=placement,
                              mode=mode, members=members)
 
@@ -163,10 +180,12 @@ class Controller:
             out.update(self._place(sched.t, devices, members))
             return out
         if isinstance(sched, (Pipelined, Async)):
-            # both sides own disjoint device slices
-            n_s = sum(l.devices for l in leaves(sched.s))
-            out.update(self._place(sched.s, devices[:n_s], members))
-            out.update(self._place(sched.t, devices[n_s:], members))
+            # both sides own disjoint device slices, split exactly as the
+            # scheduler recorded (summing leaf counts instead would
+            # double-count time-shared Temporal stages within one side
+            # and starve the other side's slice)
+            out.update(self._place(sched.s, devices[:sched.n_s], members))
+            out.update(self._place(sched.t, devices[sched.n_s:], members))
             return out
         raise TypeError(type(sched))
 
@@ -200,7 +219,9 @@ class Controller:
         mgr = ExecutionFlowManager(workers, task_fns,
                                    switcher=self._switcher,
                                    members=plan.members,
-                                   cycle_specs=cycle_specs)
+                                   cycle_specs=cycle_specs,
+                                   heartbeat=self.heartbeat,
+                                   on_failure=self.report_failure)
         out = mgr.run(plan.schedule, batch)
         self.last_timeline = mgr.timeline
         self.last_time = mgr.total_time

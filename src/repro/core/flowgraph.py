@@ -36,14 +36,17 @@ class FlowGraph:
 
     def __init__(self):
         self.g = nx.DiGraph()
+        self._key: Optional[FrozenSet[str]] = None
 
     # -- construction ------------------------------------------------------
     def add_worker(self, name: str, **attrs) -> None:
         self.g.add_node(name, **attrs)
+        self._key = None
 
     def add_edge(self, src: str, dst: str, *, channel: str = "",
                  nbytes: int = 0) -> None:
         self.g.add_edge(src, dst, channel=channel, nbytes=nbytes)
+        self._key = None
 
     @classmethod
     def from_trace(cls, events: Sequence[TraceEvent]) -> "FlowGraph":
@@ -126,7 +129,11 @@ class FlowGraph:
         return fg
 
     def key(self) -> FrozenSet[str]:
-        return frozenset(self.g.nodes)
+        # cached: the scheduler's memoized recursion calls key() on every
+        # lookup, and the node set only changes through the mutators above
+        if self._key is None:
+            self._key = frozenset(self.g.nodes)
+        return self._key
 
     def __repr__(self) -> str:
         return f"FlowGraph({list(self.g.nodes)}, edges={list(self.g.edges)})"

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import threading
 import time
+import traceback
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -25,6 +26,7 @@ import numpy as np
 
 from repro.core.channel import AsyncQueue, Channel, ChannelClosed
 from repro.core.scheduler import Async, Leaf, Pipelined, Temporal, leaves
+from repro.core.worker import WorkerFailure
 
 
 def leading_leaves(sched) -> List[Leaf]:
@@ -181,9 +183,18 @@ class ExecutionFlowManager:
                  task_fns: Dict[str, Callable[[Any, Dict], Dict]],
                  switcher: Optional[Any] = None,
                  members: Optional[Dict[str, Tuple[str, ...]]] = None,
-                 cycle_specs: Optional[Dict[str, CycleSpec]] = None):
+                 cycle_specs: Optional[Dict[str, CycleSpec]] = None,
+                 heartbeat: Optional[Any] = None,
+                 on_failure: Optional[Callable[[WorkerFailure],
+                                               None]] = None):
         self.workers = workers
         self.task_fns = task_fns
+        # failure surfacing (paper §4): every task death becomes a typed
+        # WorkerFailure reported to `on_failure` (the controller) before
+        # it propagates; `heartbeat` (core.faults.HeartbeatMonitor) gets
+        # a beat around every task call so silence is detectable
+        self.heartbeat = heartbeat
+        self.on_failure = on_failure
         # managed Temporal transitions (core.switching.ContextSwitcher):
         # per-key offload, prefetch-onload overlap, measured cost feedback
         self.switcher = switcher
@@ -212,10 +223,27 @@ class ExecutionFlowManager:
     def _apply(self, worker_name: str, chunk: Dict, idx: int) -> Dict:
         w = self.workers[worker_name]
         fn = self.task_fns[worker_name]
-        if getattr(w, "offloaded", False):
-            w.onload()
-        t0 = time.perf_counter()
-        out = fn(w, chunk)
+        try:
+            if getattr(w, "offloaded", False):
+                w.onload()
+            if self.heartbeat is not None:
+                self.heartbeat.beat(worker_name)
+            t0 = time.perf_counter()
+            out = fn(w, chunk)
+            if self.heartbeat is not None:
+                self.heartbeat.beat(worker_name)
+        except WorkerFailure as f:
+            if f.step is None and idx >= 0:
+                f.step = idx
+            if self.on_failure is not None:
+                self.on_failure(f)
+            raise
+        except BaseException as e:  # noqa: BLE001
+            f = WorkerFailure(worker_name, e, traceback.format_exc(),
+                              step=idx if idx >= 0 else None)
+            if self.on_failure is not None:
+                self.on_failure(f)
+            raise f from e
         self._record(worker_name, t0, time.perf_counter(), idx)
         return out
 
@@ -282,6 +310,7 @@ class ExecutionFlowManager:
             err: List[BaseException] = []
 
             def producer():
+                i = -1
                 try:
                     for i, c in enumerate(chunks):
                         out = self._run(sched.s, c)
@@ -290,11 +319,14 @@ class ExecutionFlowManager:
                     # surface producer-side failures: a silently dead
                     # producer yields an empty coalesce downstream, which
                     # shows up as a confusing KeyError far from the cause
+                    if isinstance(e, WorkerFailure) and e.step is None:
+                        e.step = i  # the chunk the side died on
                     err.append(e)
                 finally:
                     ch.close()
 
             def consumer():
+                i = -1
                 try:
                     while True:
                         try:
@@ -303,6 +335,8 @@ class ExecutionFlowManager:
                             break
                         results[i] = self._run(sched.t, c)
                 except BaseException as e:  # noqa: BLE001
+                    if isinstance(e, WorkerFailure) and e.step is None:
+                        e.step = i
                     err.append(e)
 
             tp = threading.Thread(target=producer, daemon=True)

@@ -29,6 +29,18 @@ class Cluster:
     def node_of(self, global_id: int) -> int:
         return global_id // self.devices_per_node
 
+    # -- liveness -----------------------------------------------------------
+    def device_alive(self, global_id: int) -> bool:
+        """Whether a device can host new allocations.  The base cluster
+        never loses devices; SimulatedCluster overrides this to model
+        host failure (launch.cluster)."""
+        return True
+
+    def available_devices(self) -> List[int]:
+        """Global IDs of live devices — the universe planning and
+        allocation draw from after a failure shrinks the cluster."""
+        return [i for i in range(self.num_devices) if self.device_alive(i)]
+
     # -- allocation ---------------------------------------------------------
     def allocate(self, owner: str, count: int,
                  *, device_ids: Optional[Sequence[int]] = None,
@@ -45,6 +57,8 @@ class Cluster:
         occ = self.occupancy()
 
         def _reject(i: int) -> Optional[str]:
+            if not self.device_alive(i):
+                return f"device {i} is on a failed host"
             if i in self._exclusive and self._exclusive[i] != owner:
                 return (f"device {i} is exclusively held by "
                         f"'{self._exclusive[i]}'")
@@ -150,6 +164,14 @@ class PlacementManager:
                 changed[name] = list(devs)
         self._managed = {n for n, d in placement.items() if d}
         return changed
+
+    def release_all(self) -> None:
+        """Free every allocation this manager placed — the teardown half
+        of failure recovery, guaranteeing no stale entries survive into
+        the re-placement."""
+        for owner in self._managed:
+            self.cluster.free(owner)
+        self._managed = set()
 
 
 def split_devices(n_devices: int, shares: Sequence[int]) -> List[List[int]]:

@@ -37,10 +37,18 @@ from repro.comm.primitives import global_router
 
 
 class WorkerFailure(RuntimeError):
-    def __init__(self, worker: str, exc: BaseException, tb: str):
-        super().__init__(f"worker {worker} failed: {exc!r}\n{tb}")
+    """Typed worker-death signal: carries the worker name, the original
+    exception and (when raised from the executor) the pipeline step /
+    chunk index at which the task died — so failure detection is
+    testable instead of string-matching thread tracebacks."""
+
+    def __init__(self, worker: str, exc: BaseException, tb: str,
+                 step: Optional[int] = None):
+        at = f" at step {step}" if step is not None else ""
+        super().__init__(f"worker {worker} failed{at}: {exc!r}\n{tb}")
         self.worker = worker
         self.original = exc
+        self.step = step
 
 
 @dataclass

@@ -1,14 +1,19 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + str(
+    int(os.environ.get("REPRO_DRYRUN_HOSTS", "1"))
+    * int(os.environ.get("REPRO_DRYRUN_DEVICES", "512")))
 
-# NOTE: the two lines above MUST be the first statements in this module —
-# jax locks the device count on first init — which is why the docstring
-# below is a plain string and __future__ imports are omitted.
+# NOTE: the statements above MUST be the first in this module — jax locks
+# the device count on first init — which is why the docstring below is a
+# plain string and __future__ imports are omitted.
 
 _DOC = """Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
 
-The two lines above MUST stay first: jax locks the device count on first
-init, and only the dry-run should see 512 placeholder devices.
+The statements above MUST stay first: jax locks the device count on first
+init, and only the dry-run should see the placeholder devices.  The faked
+topology is configurable (REPRO_DRYRUN_HOSTS × REPRO_DRYRUN_DEVICES
+placeholder devices, default 1 × 512) so tests and benchmarks can
+parametrize shape instead of hardcoding one — see tests/conftest.py.
 
 For each case we record memory_analysis (fits-on-chip proof),
 cost_analysis (FLOPs/bytes for §Roofline) and the collective schedule

@@ -104,7 +104,7 @@ class EmbodiedPPORunner(WorkflowRunner):
     def __init__(self, rl: EmbodiedPPOConfig,
                  cfg: Optional[ModelConfig] = None,
                  hp: Optional[TrainHParams] = None,
-                 cluster: Optional[Cluster] = None):
+                 cluster: Optional[Cluster] = None, **kw):
         self.rl = rl
         self._rollout_round = 0
         self.model_cfg = cfg or default_policy_config()
@@ -117,7 +117,13 @@ class EmbodiedPPORunner(WorkflowRunner):
                          profile_batches=rl.profile_batches,
                          cluster=cluster,
                          checkpoint_dir=rl.checkpoint_dir,
-                         checkpoint_every=rl.checkpoint_every)
+                         checkpoint_every=rl.checkpoint_every, **kw)
+
+    def reset_stream(self) -> None:
+        # recovery determinism: the rollout-round counter seeds each
+        # round's randomness; a rebuilt run restarts it like a fresh
+        # runner (resume_trainer_checkpoint then advances it to `start`)
+        self._rollout_round = 0
 
     # ------------------------------------------------------------------
     # declarative surface

@@ -89,7 +89,7 @@ class GRPORunner(WorkflowRunner):
 
     def __init__(self, cfg: ModelConfig, rl: GRPOConfig,
                  hp: Optional[TrainHParams] = None,
-                 cluster: Optional[Cluster] = None):
+                 cluster: Optional[Cluster] = None, **kw):
         self.model_cfg = cfg
         self.rl = rl
         self.hp = hp or TrainHParams()
@@ -102,7 +102,14 @@ class GRPORunner(WorkflowRunner):
         super().__init__(iterations=rl.iterations,
                          batch_size=rl.batch_size, mode=rl.mode,
                          profile_batches=rl.profile_batches,
-                         cluster=cluster)
+                         cluster=cluster, **kw)
+
+    def reset_stream(self) -> None:
+        # recovery determinism: a rebuilt run must see the same prompt
+        # sequence a fresh runner would
+        self.data = PromptDataset(self.rl.batch_size // self.rl.group_size,
+                                  prompt_len=self.rl.prompt_len,
+                                  seed=self.rl.seed)
 
     # ------------------------------------------------------------------
     # declarative surface
@@ -280,7 +287,7 @@ class GRPORunner(WorkflowRunner):
     def finish_async(self) -> None:  # kept for API compatibility
         pass
 
-    def run_loop(self, verbose: bool) -> None:
+    def run_loop(self, verbose: bool = True) -> None:
         if self.rl.async_depth > 0:
             self._run_async_horizon(verbose)
             return

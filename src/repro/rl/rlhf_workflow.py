@@ -250,19 +250,28 @@ class RLHFRunner(WorkflowRunner):
 
     def __init__(self, cfg: ModelConfig, ppo: PPOConfig,
                  hp: Optional[TrainHParams] = None,
-                 cluster: Optional[Cluster] = None):
+                 cluster: Optional[Cluster] = None, **kw):
         self.cfg = cfg
         self.ppo = ppo
         self.hp = hp or TrainHParams(
             optimizer=AdamWConfig(lr=1e-3, clip_norm=1.0),
             kl_coef=ppo.kl_coef, entropy_coef=0.02)
-        self.data = PromptDataset(ppo.batch_size, prompt_len=ppo.prompt_len,
-                                  seed=ppo.seed, add_only=True)
-        self.data.max_operand = 3
+        self.data = self._build_data()
         super().__init__(iterations=ppo.iterations,
                          batch_size=ppo.batch_size, mode=ppo.mode,
                          profile_batches=ppo.profile_batches,
-                         cluster=cluster)
+                         cluster=cluster, **kw)
+
+    def _build_data(self) -> PromptDataset:
+        data = PromptDataset(self.ppo.batch_size,
+                             prompt_len=self.ppo.prompt_len,
+                             seed=self.ppo.seed, add_only=True)
+        data.max_operand = 3
+        return data
+
+    def reset_stream(self) -> None:
+        # recovery determinism: replay the fresh runner's prompt sequence
+        self.data = self._build_data()
 
     # ------------------------------------------------------------------
     # declarative surface

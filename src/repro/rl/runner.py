@@ -30,6 +30,7 @@ import numpy as np
 from repro.comm.resharding import timed_weight_sync, transfer_stats
 from repro.core import Cluster, Controller, FlowGraph, Profiler, SchedulerConfig
 from repro.core.profiler import CostModel, fit_tail_factor, measure_onoffload
+from repro.core.worker import WorkerFailure
 
 
 class WorkflowRunner:
@@ -61,7 +62,10 @@ class WorkflowRunner:
                  profile_batches: Sequence[int] = (8, 32),
                  cluster: Optional[Cluster] = None,
                  checkpoint_dir: Optional[str] = None,
-                 checkpoint_every: int = 0):
+                 checkpoint_every: int = 0,
+                 fault_injector: Optional[Any] = None,
+                 fault_tolerant: Optional[bool] = None,
+                 max_recoveries: int = 2):
         self.iterations = iterations
         self.batch_size = batch_size
         self.mode = mode
@@ -71,9 +75,21 @@ class WorkflowRunner:
         # auto-resume from it when run() starts
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = checkpoint_every
+        # failure injection + recovery (core.faults): the injector's kill
+        # switch is spliced into the task fns; `fault_tolerant` gates the
+        # run_loop's catch-and-recover (default: on exactly when an
+        # injector is present, so a genuine bug in a normal test run
+        # still raises instead of silently recovering in a loop)
+        self.fault_injector = fault_injector
+        self.fault_tolerant = (fault_tolerant if fault_tolerant is not None
+                               else fault_injector is not None)
+        self.max_recoveries = max_recoveries
+        self.recoveries = 0
+        self.recovery_log: List[WorkerFailure] = []
         self.cluster = cluster or Cluster(num_nodes=1, devices_per_node=8)
         self.workers: Dict[str, Any] = self.build_workers()
-        self.task_fns: Dict[str, Callable] = self.build_task_fns()
+        self.task_fns: Dict[str, Callable] = self._arm_task_fns(
+            self.build_task_fns())
         self._graph: Optional[FlowGraph] = None
         self.controller = Controller(self.cluster)
         self.plan = None
@@ -82,6 +98,12 @@ class WorkflowRunner:
         # total measured seconds, total bytes moved, number of syncs
         self.sync_stats: Dict[str, float] = {
             "seconds": 0.0, "bytes": 0.0, "syncs": 0}
+
+    def _arm_task_fns(self, task_fns: Dict[str, Callable]
+                      ) -> Dict[str, Callable]:
+        if self.fault_injector is not None:
+            return self.fault_injector.arm(task_fns)
+        return task_fns
 
     # ------------------------------------------------------------------
     # declarative surface
@@ -97,6 +119,14 @@ class WorkflowRunner:
 
     def make_batch(self) -> Dict[str, np.ndarray]:
         raise NotImplementedError
+
+    def reset_stream(self) -> None:
+        """Reset the data stream to its construction-time state.  Called
+        by :meth:`recover` so a recovered run replays EXACTLY the batch
+        sequence a fresh runner resumed from the same checkpoint would
+        see — the invariant the recovery-determinism tests assert.
+        Subclasses with a data source must override (rebuild the dataset
+        with the same seed, zero rollout-round counters, ...)."""
 
     def scheduler_config(self) -> SchedulerConfig:
         return SchedulerConfig(total_batch=self.batch_size)
@@ -216,6 +246,8 @@ class WorkflowRunner:
     # ------------------------------------------------------------------
     def run_iteration(self, it: int):
         t0 = time.perf_counter()
+        if self.fault_injector is not None:
+            self.fault_injector.set_iteration(it)
         self._sync_weights()
         batch = self.make_batch()
         out = self.controller.execute(
@@ -251,20 +283,85 @@ class WorkflowRunner:
         self.actor.set_state("opt", tree["opt"])
         return step
 
-    def run_loop(self, verbose: bool) -> None:
+    # ------------------------------------------------------------------
+    # failure recovery (core.faults): detect -> teardown -> re-place ->
+    # resume from the last checkpoint
+    # ------------------------------------------------------------------
+    def teardown(self) -> None:
+        """Release everything the dead run held: router registrations,
+        cluster allocations (both construction-time owners and plan-
+        managed ones), the context switcher, and the failure latch.
+        After this the cluster looks exactly as it did before the runner
+        was constructed (minus any failed hosts)."""
+        for name, w in self.workers.items():
+            if hasattr(w, "shutdown"):
+                w.shutdown()
+            self.cluster.free(name)
+        self.controller.placement_manager.release_all()
+        self.controller._switcher = None
+        self.controller.profiles = {}
+        self.controller.reset_failures()
+        self.plan = None
+        self._graph = None
+
+    def recover(self, verbose: bool = True) -> int:
+        """Re-establish the run after a WorkerFailure; returns the
+        iteration to resume from.
+
+        Recovery is DEFINED as a fresh runner resumed from the last
+        checkpoint: tear everything down, reset the data stream, rebuild
+        the workers on the surviving devices (``Cluster.allocate`` skips
+        dead hosts), re-profile, re-plan (``Controller.plan`` draws from
+        ``available_devices``), and restore trainer state.  Because each
+        step replays ``run()``'s own prologue, the recovered run is
+        bit-equivalent to the fresh-resume baseline by construction."""
+        self.teardown()
+        self.reset_stream()
+        self.workers = self.build_workers()
+        self.task_fns = self._arm_task_fns(self.build_task_fns())
+        self.profile()
+        self.plan_execution()
+        start = self.resume_trainer_checkpoint()
+        if verbose:
+            print(f"recovered: re-placed on "
+                  f"{len(self.cluster.available_devices())} live device(s), "
+                  f"resuming at iteration {start}")
+        return start
+
+    def run_loop(self, verbose: bool = True) -> None:
+        if self.plan is None:
+            # allow run_loop() as the single entry point (recover() goes
+            # through the same profile -> plan path)
+            self.profile()
+            self.plan_execution()
         start = self.resume_trainer_checkpoint()
         if start and verbose:
             print(f"resumed trainer state from {self.checkpoint_dir} "
                   f"at iteration {start}"
                   + (" (nothing left to run)"
                      if start >= self.iterations else ""))
-        for it in range(start, self.iterations):
-            st = self.run_iteration(it)
+        it = start
+        while it < self.iterations:
+            try:
+                st = self.run_iteration(it)
+            except WorkerFailure as f:
+                if (not self.fault_tolerant
+                        or self.recoveries >= self.max_recoveries):
+                    raise
+                self.recoveries += 1
+                self.recovery_log.append(f)
+                if verbose:
+                    print(f"worker failure at iteration {it}: "
+                          f"{f.worker} (step {f.step}) — recovering "
+                          f"({self.recoveries}/{self.max_recoveries})")
+                it = self.recover(verbose)
+                continue
             if verbose:
                 self.log_iteration(st)
             if (self.checkpoint_dir and self.checkpoint_every
                     and (it + 1) % self.checkpoint_every == 0):
                 self.save_trainer_checkpoint(it)
+            it += 1
 
     def run(self, verbose: bool = True) -> List[Any]:
         self.profile()

@@ -1,5 +1,12 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device;
-only launch/dryrun.py forces 512 placeholder devices (in a subprocess)."""
+only launch/dryrun.py forces placeholder devices (in a subprocess).  The
+dry-run topology is configurable there via REPRO_DRYRUN_HOSTS /
+REPRO_DRYRUN_DEVICES (hosts x devices-per-host, default 1x512), and
+launch.cluster.cluster_from_env reads the same knobs so a test or script
+can stand up a simulated multi-host cluster without touching XLA flags:
+
+    REPRO_DRYRUN_HOSTS=4 REPRO_DRYRUN_DEVICES=8 python -m repro.launch.dryrun
+"""
 import os
 import sys
 

@@ -1,0 +1,527 @@
+"""Fault injection, typed failure propagation, heartbeat detection, and
+kill-and-recover determinism (scale-out fault tolerance).
+
+The recovery invariant under test: a run that loses a worker (or a whole
+simulated host) mid-iteration must detect the death as a typed
+WorkerFailure, re-place onto surviving devices, and resume from the last
+checkpoint such that its post-recovery trajectory EQUALS a fresh runner
+resumed from the same checkpoint — exactly for a deterministic toy
+workflow, within tolerance for the three real workflow families.
+"""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.comm.primitives import global_router, reset_router
+from repro.core import (
+    CycleSpec,
+    ExecutionFlowManager,
+    FaultInjector,
+    FaultSpec,
+    FlowGraph,
+    HeartbeatMonitor,
+    InjectedFault,
+    SchedulerConfig,
+    Worker,
+    WorkerFailure,
+    cycle_node_name,
+)
+from repro.core.scheduler import Leaf, Pipelined
+from repro.launch.cluster import SimulatedCluster, cluster_from_env
+from repro.rl.runner import WorkflowRunner
+
+
+# ---------------------------------------------------------------------------
+# SimulatedCluster: liveness semantics
+# ---------------------------------------------------------------------------
+def test_simulated_cluster_host_failure_and_restore():
+    sc = SimulatedCluster(num_nodes=3, devices_per_node=4)
+    assert sc.num_devices == 12
+    assert sc.available_devices() == list(range(12))
+    sc.allocate("w", 4, device_ids=[2, 3, 4, 5])
+    touched = sc.fail_host(1)
+    assert touched == ["w"]  # w straddles the dead host
+    assert sc.available_devices() == [0, 1, 2, 3, 8, 9, 10, 11]
+    assert not sc.device_alive(5) and sc.device_alive(3)
+    # new allocations skip the dead host's devices
+    ids = sc.allocate("fresh", 6)
+    assert all(sc.device_alive(i) for i in ids)
+    # pinning onto a dead device is an explicit error
+    with pytest.raises(ValueError, match="failed host"):
+        sc.allocate("bad", 1, device_ids=[6])
+    sc.restore_host(1)
+    assert len(sc.available_devices()) == 12
+
+
+def test_cluster_from_env_reads_dryrun_knobs(monkeypatch):
+    monkeypatch.setenv("REPRO_DRYRUN_HOSTS", "3")
+    monkeypatch.setenv("REPRO_DRYRUN_DEVICES", "2")
+    sc = cluster_from_env()
+    assert (sc.num_hosts, sc.devices_per_node) == (3, 2)
+    # explicit args beat the env
+    sc = cluster_from_env(hosts=2, devices_per_host=4)
+    assert (sc.num_hosts, sc.devices_per_node) == (2, 4)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: fire-once-at-the-configured-point semantics
+# ---------------------------------------------------------------------------
+class _StubWorker:
+    def __init__(self, name, devices=()):
+        self.name = name
+        self.devices = tuple(devices)
+        self.offloaded = False
+
+
+def test_injector_fires_at_iteration_and_invocation():
+    inj = FaultInjector(FaultSpec("gen", iteration=2, invocation=1))
+    fns = inj.arm({"gen": lambda w, c: c, "train": lambda w, c: c})
+    w = _StubWorker("gen/0")
+    inj.set_iteration(1)
+    fns["gen"](w, {})
+    fns["gen"](w, {})  # wrong iteration: never fires
+    inj.set_iteration(2)
+    fns["gen"](w, {})  # invocation 0 survives
+    with pytest.raises(InjectedFault):
+        fns["gen"](w, {})  # invocation 1 dies
+    assert inj.fired and w._injected_dead
+    # the dead instance stays dead...
+    with pytest.raises(InjectedFault):
+        fns["gen"](w, {})
+    # ...but a rebuilt worker of the same name is clean (one-shot)
+    assert fns["gen"](_StubWorker("gen/0"), {"ok": 1}) == {"ok": 1}
+    inj.set_iteration(2)
+    assert fns["gen"](_StubWorker("gen/0"), {"ok": 1}) == {"ok": 1}
+
+
+def test_injector_kill_host_takes_devices_down():
+    sc = SimulatedCluster(num_nodes=2, devices_per_node=4)
+    inj = FaultInjector(FaultSpec("gen", iteration=0, kill_host=True),
+                        cluster=sc)
+    fns = inj.arm({"gen": lambda w, c: c})
+    inj.set_iteration(0)
+    with pytest.raises(InjectedFault, match="host down"):
+        fns["gen"](_StubWorker("gen/0", devices=(5,)), {})
+    assert sc.available_devices() == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor: silent-hang detection with an injected clock
+# ---------------------------------------------------------------------------
+def test_heartbeat_monitor_flags_silent_workers():
+    t = [0.0]
+    hb = HeartbeatMonitor(timeout=5.0, clock=lambda: t[0])
+    hb.beat("a")
+    hb.beat("b")
+    t[0] = 3.0
+    hb.beat("a")
+    assert hb.silent() == []
+    t[0] = 8.0  # a beat 5s ago (boundary), b beat 8s ago
+    assert hb.silent() == ["b"]
+    with pytest.raises(TimeoutError, match="b"):
+        hb.check()
+    hb.beat("b")
+    hb.check()  # recovered
+    hb.reset()
+    assert hb.silent() == []
+
+
+def test_executor_beats_heartbeat_around_tasks():
+    hb = HeartbeatMonitor(timeout=60.0)
+    mgr = ExecutionFlowManager({"a": _StubWorker("a")},
+                               {"a": lambda w, c: dict(c)}, heartbeat=hb)
+    mgr.run(Leaf("a", 1, 4), {"x": np.zeros((4, 1))})
+    assert hb.last_beat("a") is not None
+
+
+# ---------------------------------------------------------------------------
+# typed WorkerFailure propagation (satellite fix): Pipelined + cycle
+# threads must surface death as WorkerFailure(worker, step), and
+# coalesce must never run over partial payloads
+# ---------------------------------------------------------------------------
+def test_pipelined_consumer_death_is_typed_with_step():
+    boom = ValueError("boom")
+    seen = []
+
+    def bad(w, c):
+        seen.append(1)
+        if len(seen) == 2:
+            raise boom
+        return dict(c)
+
+    reported = []
+    mgr = ExecutionFlowManager(
+        {"a": _StubWorker("a"), "b": _StubWorker("b")},
+        {"a": lambda w, c: dict(c), "b": bad},
+        on_failure=reported.append)
+    sched = Pipelined(Leaf("a", 1, 8), Leaf("b", 1, 8), 2, 1, 1)
+    with pytest.raises(WorkerFailure) as ei:
+        mgr.run(sched, {"x": np.arange(8.0).reshape(8, 1)})
+    f = ei.value
+    assert f.worker == "b"
+    assert f.original is boom
+    assert f.step == 1  # died on the second chunk
+    assert reported and reported[0] is f
+
+
+def test_pipelined_producer_death_never_reaches_coalesce():
+    def bad(w, c):
+        raise RuntimeError("producer died")
+
+    mgr = ExecutionFlowManager(
+        {"a": _StubWorker("a"), "b": _StubWorker("b")},
+        {"a": bad, "b": lambda w, c: dict(c)})
+    sched = Pipelined(Leaf("a", 1, 8), Leaf("b", 1, 8), 4, 1, 1)
+    with pytest.raises(WorkerFailure) as ei:
+        mgr.run(sched, {"x": np.arange(8.0).reshape(8, 1)})
+    assert ei.value.worker == "a"
+    assert ei.value.step == 0
+
+
+@pytest.mark.parametrize("mode,member_devices", [
+    ("collocated", None), ("hybrid", (1, 1))])
+def test_cycle_member_death_is_typed(mode, member_devices):
+    node = cycle_node_name(("gen", "sim"))
+
+    def sim(w, c):
+        if c["cycle_step"] == 1:
+            raise RuntimeError("sim segfault")
+        return dict(c)
+
+    mgr = ExecutionFlowManager(
+        {"gen": _StubWorker("gen"), "sim": _StubWorker("sim")},
+        {"gen": lambda w, c: dict(c), "sim": sim},
+        members={node: ("gen", "sim")},
+        cycle_specs={node: CycleSpec(order=("gen", "sim"), steps=3,
+                                     chunks=2)})
+    leaf = Leaf(node, 2, 4, cycle_mode=mode, member_devices=member_devices,
+                cycle_chunks=2)
+    with pytest.raises(WorkerFailure) as ei:
+        mgr.run(leaf, {"obs": np.zeros((4, 2))})
+    assert ei.value.worker == "sim"
+    assert ei.value.step is not None and ei.value.step >= 1
+
+
+# ---------------------------------------------------------------------------
+# deterministic toy workflow: recovery == fresh-resume, bit-exact
+# ---------------------------------------------------------------------------
+class ToyTrainer(Worker):
+    def __init__(self, name, devices=()):
+        super().__init__(name, devices=devices)
+        self.register_state("params", np.zeros(4, np.float64))
+        self.register_state("opt", np.zeros(1, np.float64))
+
+    def params(self):
+        return self.get_state("params")
+
+    def train(self, chunk):
+        p = np.asarray(self.get_state("params"), np.float64)
+        o = np.asarray(self.get_state("opt"), np.float64)
+        p = p + 0.01 * np.asarray(chunk["x"], np.float64).mean(axis=0)
+        o = o + 1.0
+        self.set_state("params", p)
+        self.set_state("opt", o)
+        out = dict(chunk)
+        out["metric"] = float(p.sum())
+        return out
+
+
+class ToyRollout(Worker):
+    def __init__(self, name, devices=()):
+        super().__init__(name, devices=devices)
+        self._wsum = 0.0
+
+    def update_weights(self, params, version=None):
+        import jax
+        leaves = jax.tree_util.tree_leaves(params)
+        self._wsum = float(sum(np.asarray(l).sum() for l in leaves))
+
+    def gen(self, chunk):
+        out = dict(chunk)
+        out["x"] = np.asarray(chunk["x"], np.float64) + self._wsum
+        return out
+
+
+class ToyRunner(WorkflowRunner):
+    weight_sync_workers = ("rollout",)
+    versioned_sync_worker = None
+
+    def __init__(self, **kw):
+        self._count = 0
+        kw.setdefault("iterations", 4)
+        kw.setdefault("batch_size", 8)
+        kw.setdefault("mode", "collocated")
+        kw.setdefault("profile_batches", (4,))
+        kw.setdefault("cluster",
+                      SimulatedCluster(num_nodes=2, devices_per_node=2))
+        super().__init__(**kw)
+
+    def build_workers(self):
+        self.actor = ToyTrainer(
+            "trainer/0", devices=self.cluster.allocate("trainer", 2))
+        self.rollout = ToyRollout(
+            "rollout/0", devices=self.cluster.allocate("rollout", 2))
+        return {"rollout": self.rollout, "trainer": self.actor}
+
+    def build_task_fns(self):
+        return {"rollout": lambda w, c: w.gen(c),
+                "trainer": lambda w, c: w.train(c)}
+
+    def build_graph(self):
+        g = FlowGraph()
+        g.add_worker("rollout")
+        g.add_worker("trainer")
+        g.add_edge("rollout", "trainer")
+        return g
+
+    def make_batch(self):
+        self._count += 1
+        base = np.linspace(0.0, 1.0, self.batch_size * 4).reshape(
+            self.batch_size, 4)
+        return {"x": base * self._count}
+
+    def reset_stream(self):
+        self._count = 0
+
+    def scheduler_config(self):
+        return SchedulerConfig(total_batch=self.batch_size,
+                               granularity_divisors=(1, 2))
+
+    def _record_stats(self, it, wall, out):
+        st = (it, float(out["metric"]))
+        self.stats.append(st)
+        return st
+
+    def log_iteration(self, st):
+        pass
+
+
+def _toy_three_stage(tmp_path, role, mode, k=2, total=5, kill_host=False):
+    """Stage 1 advances a run to a checkpoint at iteration k; stage 2
+    resumes with a kill at (k, invocation 0) and recovers; stage 3 is the
+    uninterrupted baseline resumed from a copy of the same checkpoint.
+    Returns (faulted_runner, baseline_runner)."""
+    ck = str(tmp_path / f"ck-{role}-{mode}")
+    ck_base = ck + "-baseline"
+    # batch 2 pins the disaggregated granularity sweep to a single
+    # candidate (only divisor 2 divides), so the chunking — and hence the
+    # exact float sequence — cannot drift with measured profile noise
+    batch = 2 if mode == "disaggregated" else 8
+
+    reset_router()
+    warm = ToyRunner(iterations=k, mode=mode, batch_size=batch,
+                     checkpoint_dir=ck, checkpoint_every=1)
+    warm.run(verbose=False)
+    shutil.copytree(ck, ck_base)
+
+    reset_router()
+    cluster = SimulatedCluster(num_nodes=2, devices_per_node=2)
+    inj = FaultInjector(FaultSpec(role, iteration=k, invocation=0,
+                                  kill_host=kill_host), cluster=cluster)
+    faulted = ToyRunner(iterations=total, mode=mode, batch_size=batch,
+                        checkpoint_dir=ck, checkpoint_every=1,
+                        fault_injector=inj, cluster=cluster)
+    faulted.run(verbose=False)
+    assert inj.fired
+    assert faulted.recoveries == 1
+    assert faulted.recovery_log[0].worker == role
+
+    reset_router()
+    baseline = ToyRunner(iterations=total, mode=mode, batch_size=batch,
+                         checkpoint_dir=ck_base, checkpoint_every=1)
+    baseline.run(verbose=False)
+    assert baseline.recoveries == 0
+    return faulted, baseline
+
+
+@pytest.mark.parametrize("role", ["rollout", "trainer"])
+@pytest.mark.parametrize("mode", ["collocated", "disaggregated"])
+def test_toy_recovery_is_bit_exact(tmp_path, role, mode):
+    faulted, baseline = _toy_three_stage(tmp_path, role, mode)
+    # post-recovery trajectory identical to the fresh-resume baseline
+    assert faulted.stats == baseline.stats
+    np.testing.assert_array_equal(faulted.actor.params(),
+                                  baseline.actor.params())
+    np.testing.assert_array_equal(
+        np.asarray(faulted.actor.get_state("opt")),
+        np.asarray(baseline.actor.get_state("opt")))
+
+
+def test_toy_recovery_after_host_death_uses_survivors(tmp_path):
+    faulted, baseline = _toy_three_stage(tmp_path, "trainer", "collocated",
+                                         kill_host=True)
+    alive = set(faulted.cluster.available_devices())
+    assert len(alive) == 2  # one of the two hosts died
+    for name, devs in faulted.plan.placement.items():
+        assert set(devs) <= alive, (name, devs)
+    # the metric trajectory still matches (device count does not change
+    # the toy math)
+    assert faulted.stats == baseline.stats
+
+
+def test_no_stale_allocations_or_registrations_after_recovery(tmp_path):
+    faulted, _ = _toy_three_stage(tmp_path, "rollout", "collocated", k=1,
+                                  total=3)
+    cluster = faulted.cluster
+    # every cluster allocation is exactly a plan placement (no leftovers
+    # from the dead incarnation or from construction-time allocation)
+    planned = {n: sorted(d) for n, d in faulted.plan.placement.items() if d}
+    assert {n: sorted(d) for n, d in cluster._allocations.items()} == planned
+    # router knows exactly the live workers, bound to their live devices
+    router = global_router()
+    assert set(router._workers) == {w.name
+                                    for w in faulted.workers.values()}
+    for w in faulted.workers.values():
+        assert router.placement(w.name)["devices"] == list(w.devices)
+
+
+def test_unhandled_failure_raises_when_not_fault_tolerant(tmp_path):
+    reset_router()
+    inj = FaultInjector(FaultSpec("rollout", iteration=1))
+    runner = ToyRunner(iterations=3, fault_injector=inj,
+                       fault_tolerant=False,
+                       checkpoint_dir=str(tmp_path / "nt"),
+                       checkpoint_every=1)
+    with pytest.raises(WorkerFailure) as ei:
+        runner.run(verbose=False)
+    assert ei.value.worker == "rollout"
+    assert isinstance(ei.value.original, InjectedFault)
+    assert runner.recoveries == 0
+
+
+def test_max_recoveries_bounds_the_loop(tmp_path):
+    reset_router()
+
+    class EveryIterationInjector(FaultInjector):
+        def set_iteration(self, it):
+            # re-target: this chaos monkey kills rollout EVERY iteration
+            object.__setattr__(self, "spec",
+                               FaultSpec("rollout", iteration=it))
+            self.fired = False
+            super().set_iteration(it)
+
+    inj = EveryIterationInjector(FaultSpec("rollout", iteration=0))
+    runner = ToyRunner(iterations=3, fault_injector=inj, max_recoveries=2,
+                       checkpoint_dir=str(tmp_path / "mr"),
+                       checkpoint_every=1)
+    with pytest.raises(WorkerFailure):
+        runner.run(verbose=False)
+    assert runner.recoveries == 2
+
+
+# ---------------------------------------------------------------------------
+# e2e kill-and-recover for the three real workflow families on a
+# 2-host simulated topology (acceptance criterion)
+# ---------------------------------------------------------------------------
+def _grpo_runner(ck, iterations, injector=None, cluster=None):
+    from repro.configs import get_config
+    from repro.rl import GRPOConfig, GRPORunner
+    from repro.train import TrainHParams
+    from repro.train.optimizer import AdamWConfig
+
+    cfg = get_config("yi-9b").reduced().replace(
+        vocab_size=32, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=128)
+    rl = GRPOConfig(batch_size=8, group_size=4, iterations=iterations,
+                    max_new_tokens=4, mode="auto", seed=0,
+                    profile_batches=(4, 8))
+    return GRPORunner(
+        cfg, rl, TrainHParams(optimizer=AdamWConfig(lr=1e-3)),
+        cluster=cluster or SimulatedCluster(num_nodes=2, devices_per_node=4),
+        checkpoint_dir=ck, checkpoint_every=1, fault_injector=injector)
+
+
+def _rlhf_runner(ck, iterations, injector=None, cluster=None):
+    from repro.configs import get_config
+    from repro.rl import PPOConfig, RLHFRunner
+
+    cfg = get_config("stablelm-12b").reduced().replace(
+        vocab_size=32, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=128)
+    return RLHFRunner(
+        cfg, PPOConfig(batch_size=8, iterations=iterations,
+                       max_new_tokens=3, seed=0, profile_batches=(4, 8)),
+        cluster=cluster or SimulatedCluster(num_nodes=2, devices_per_node=4),
+        checkpoint_dir=ck, checkpoint_every=1, fault_injector=injector)
+
+
+def _embodied_runner(ck, iterations, injector=None, cluster=None):
+    from repro.rl import EmbodiedPPOConfig, EmbodiedPPORunner
+
+    rl = EmbodiedPPOConfig(num_envs=8, horizon=4, iterations=iterations,
+                           mode="collocated", seed=0, max_steps=8,
+                           profile_batches=(4, 8), checkpoint_dir=ck,
+                           checkpoint_every=1)
+    return EmbodiedPPORunner(
+        rl,
+        cluster=cluster or SimulatedCluster(num_nodes=2, devices_per_node=4),
+        fault_injector=injector)
+
+
+_FAMILIES = {
+    # family -> (builder, role to kill, invocation, stat fields compared)
+    "grpo": (_grpo_runner, "rollout", 0, ("mean_reward", "accuracy")),
+    "rlhf": (_rlhf_runner, "actor", 0, ("mean_reward", "value_loss")),
+    # invocation 2 = the simulator's third cycle step: a mid-loop
+    # phase-boundary kill inside the collapsed cycle node
+    "embodied": (_embodied_runner, "simulator", 2,
+                 ("mean_reward", "success_rate")),
+}
+
+
+@pytest.mark.parametrize("family", sorted(_FAMILIES))
+def test_kill_and_recover_e2e_matches_fresh_resume(tmp_path, family):
+    make, role, invocation, fields = _FAMILIES[family]
+    k, total = 1, 3
+    ck = str(tmp_path / f"{family}-ck")
+    ck_base = ck + "-baseline"
+
+    reset_router()
+    make(ck, iterations=k).run(verbose=False)
+    shutil.copytree(ck, ck_base)
+
+    reset_router()
+    cluster = SimulatedCluster(num_nodes=2, devices_per_node=4)
+    inj = FaultInjector(FaultSpec(role, iteration=k, invocation=invocation),
+                        cluster=cluster)
+    faulted = make(ck, iterations=total, injector=inj, cluster=cluster)
+    faulted.run(verbose=False)
+    assert inj.fired
+    assert faulted.recoveries == 1
+    assert faulted.recovery_log[0].worker == role
+
+    reset_router()
+    baseline = make(ck_base, iterations=total)
+    baseline.run(verbose=False)
+
+    got = [s for s in faulted.stats if s.iteration >= k]
+    want = [s for s in baseline.stats if s.iteration >= k]
+    assert [s.iteration for s in got] == [s.iteration for s in want]
+    for g, w in zip(got, want):
+        for f in fields:
+            assert np.isfinite(getattr(g, f))
+            np.testing.assert_allclose(getattr(g, f), getattr(w, f),
+                                       rtol=1e-4, atol=1e-5, err_msg=f)
+    # re-placement left no stale cluster allocations behind
+    planned = {n: sorted(d) for n, d in faulted.plan.placement.items() if d}
+    current = {n: sorted(d)
+               for n, d in faulted.cluster._allocations.items()}
+    assert current == planned
+
+
+def test_grpo_recovers_onto_surviving_host(tmp_path):
+    """Host death: the run must finish on the surviving host's devices."""
+    ck = str(tmp_path / "hostkill-ck")
+    reset_router()
+    cluster = SimulatedCluster(num_nodes=2, devices_per_node=4)
+    inj = FaultInjector(FaultSpec("actor", iteration=1, kill_host=True),
+                        cluster=cluster)
+    runner = _grpo_runner(ck, iterations=3, injector=inj, cluster=cluster)
+    stats = runner.run(verbose=False)
+    assert runner.recoveries == 1
+    assert len(cluster.available_devices()) == 4
+    for name, devs in runner.plan.placement.items():
+        assert all(cluster.device_alive(i) for i in devs), (name, devs)
+    assert all(np.isfinite(s.mean_reward) for s in stats)

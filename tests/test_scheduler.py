@@ -271,3 +271,144 @@ def test_chunk_multiple_constrains_pipeline_granularity():
     assert t < float("inf")
     for lf in leaves(s):
         assert lf.batch % 8 == 0, (lf.worker, lf.batch)
+
+
+# ---------------------------------------------------------------------------
+# Plan invariants (property-based).  Whatever Algorithm 1 emits — flat or
+# hierarchical — the bound plan must (a) place every worker on live cluster
+# devices only, (b) keep the two sides of any concurrent composition
+# (Pipelined/Async) on disjoint devices, and (c) keep every chunk aligned
+# to the data atomicity unit ``chunk_multiple``.  Recovery re-plans through
+# the same code path over a shrunken device set, so these invariants are
+# exactly what keeps a post-failure plan sound.
+# ---------------------------------------------------------------------------
+from repro.core import Async, Controller
+from repro.core.placement import Cluster
+from repro.launch.cluster import SimulatedCluster
+
+
+def _random_workflow(k, seed):
+    """A random k-worker DAG (plus one back-edge cycle sometimes) with
+    random cost profiles — the adversarial input space for planning."""
+    import random
+
+    rng = random.Random(seed)
+    g = FlowGraph()
+    names = [f"w{i}" for i in range(k)]
+    for nm in names:
+        g.add_worker(nm)
+    for i in range(1, k):
+        g.add_edge(names[rng.randrange(i)], names[i])
+    if k >= 3 and rng.random() < 0.3:
+        # close a 2-cycle so the condensation path is exercised too
+        g.add_edge(names[1], names[0])
+        g.add_edge(names[0], names[1])
+    profiles = {
+        nm: CostModel(nm, base_time=rng.uniform(0.01, 0.5),
+                      slope_time=rng.uniform(0.001, 0.05),
+                      onload_time=rng.uniform(0.0, 0.5),
+                      offload_time=rng.uniform(0.0, 0.5),
+                      tail_factor=rng.choice([1.0, 1.0, 4.0]),
+                      scalable=rng.random() > 0.15)
+        for nm in names
+    }
+    return g, profiles
+
+
+def _side_workers(sched, members):
+    """Worker names bound by one side of a composition, cycle leaves
+    expanded to their member workers (the names placement is keyed by)."""
+    out = []
+    for lf in leaves(sched):
+        ms = members.get(lf.worker, ())
+        out.extend(ms if len(ms) > 1 else (lf.worker,))
+    return out
+
+
+def _assert_plan_invariants(plan, cluster, cfg):
+    alive = set(cluster.available_devices())
+    placed = {w for lf in leaves(plan.schedule)
+              for w in _side_workers(lf, plan.members)}
+    assert set(plan.placement) == placed
+    for w, devs in plan.placement.items():
+        assert devs, f"{w} placed on no devices"
+        assert set(devs) <= alive, (w, devs)
+
+    def walk(s):
+        if isinstance(s, Leaf):
+            assert s.batch % cfg.chunk_multiple == 0, (s.worker, s.batch)
+            return
+        if isinstance(s, (Pipelined, Async)):
+            if isinstance(s, Pipelined):
+                assert s.granularity % cfg.chunk_multiple == 0
+            left = set()
+            for w in _side_workers(s.s, plan.members):
+                left |= set(plan.placement[w])
+            right = set()
+            for w in _side_workers(s.t, plan.members):
+                right |= set(plan.placement[w])
+            assert not (left & right), (sorted(left), sorted(right))
+        walk(s.s)
+        walk(s.t)
+
+    walk(plan.schedule)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(2, 5),
+    seed=st.integers(0, 50),
+    hosts=st.sampled_from([1, 2, 4]),
+    dpn=st.sampled_from([4, 8]),
+    batch=st.sampled_from([64, 128]),
+    chunk_multiple=st.sampled_from([1, 4]),
+    hierarchical=st.sampled_from([False, True]),
+)
+def test_plan_invariants_property(k, seed, hosts, dpn, batch,
+                                  chunk_multiple, hierarchical):
+    g, profiles = _random_workflow(k, seed)
+    cluster = Cluster(num_nodes=hosts, devices_per_node=dpn)
+    cfg = SchedulerConfig(total_batch=batch, device_quantum=1,
+                          chunk_multiple=chunk_multiple,
+                          hierarchical=hierarchical,
+                          host_group_size=dpn)
+    ctrl = Controller(cluster, profiles, cfg)
+    plan = ctrl.plan(g, total_batch=batch)
+    assert plan.est_time < float("inf")
+    _assert_plan_invariants(plan, cluster, cfg)
+
+
+@settings(max_examples=8, deadline=None)
+@given(k=st.integers(2, 4), seed=st.integers(0, 30))
+def test_plan_invariants_survive_host_failure(k, seed):
+    """Re-planning over the post-failure device set keeps every invariant:
+    nothing lands on the dead host and concurrent sides stay disjoint."""
+    g, profiles = _random_workflow(k, seed)
+    cluster = SimulatedCluster(num_nodes=2, devices_per_node=4)
+    cluster.fail_host(1)
+    cfg = SchedulerConfig(total_batch=64, device_quantum=1)
+    plan = Controller(cluster, profiles, cfg).plan(g, total_batch=64)
+    dead = set(cluster.host_devices(1))
+    for w, devs in plan.placement.items():
+        assert not (set(devs) & dead), (w, devs)
+    _assert_plan_invariants(plan, cluster, cfg)
+
+
+def test_hierarchical_plan_invariants_at_scale():
+    """The hierarchical planner (scale-out path) obeys the same invariants
+    over hundreds of devices, and its estimate stays close to the flat
+    planner's on a paper-shaped workflow."""
+    profiles = paper_like_profiles()
+    g = grpo_graph()
+    cluster = Cluster(num_nodes=16, devices_per_node=8)  # 128 devices
+    base = dict(total_batch=512, device_quantum=8, chunk_multiple=4,
+                host_group_size=8)
+    hier_cfg = SchedulerConfig(**base, hierarchical=True)
+    plan = Controller(cluster, profiles, hier_cfg).plan(g, total_batch=512)
+    _assert_plan_invariants(plan, cluster, hier_cfg)
+    flat_cfg = SchedulerConfig(**base, hierarchical=False)
+    flat = Controller(Cluster(num_nodes=16, devices_per_node=8),
+                      profiles, flat_cfg).plan(g, total_batch=512)
+    _assert_plan_invariants(flat, cluster, flat_cfg)
+    # coarse inter-host splits cost at most a modest estimate penalty
+    assert plan.est_time <= flat.est_time * 1.5 + 1e-9
