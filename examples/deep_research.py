@@ -37,6 +37,43 @@ VOCAB = QUERY0 + N_TOPICS  # 28
 SEQ = 8  # [BOS, topic, query, fact, ans, EOSish pad...]
 
 
+def build_graph() -> FlowGraph:
+    """Workflow graph: policy <-> tool cycle + reward + train.  Module
+    level so flowlint can lint the example's graph without running it."""
+    g = FlowGraph()
+    for w in ("policy_gen", "search_tool", "reward", "train"):
+        g.add_worker(w)
+    g.add_edge("policy_gen", "search_tool")
+    g.add_edge("search_tool", "policy_gen")  # the tool loop
+    g.add_edge("policy_gen", "reward")
+    g.add_edge("reward", "train")
+    return g
+
+
+def cycle_specs(steps: int = 2, chunks: int = 2):
+    """CycleSpec for the collapsed policy↔tool loop (2 steps per sample:
+    query, then answer)."""
+    from repro.core.flowgraph import cycle_node_name
+    from repro.core.pipeline import CycleSpec
+    name = cycle_node_name(("policy_gen", "search_tool"))
+    return {name: CycleSpec(order=("policy_gen", "search_tool"),
+                            steps=steps, chunks=chunks)}
+
+
+def cost_models():
+    return {
+        "policy_gen": CostModel("policy_gen", base_time=0.05,
+                                slope_time=2e-3, onload_time=0.2,
+                                offload_time=0.2),
+        "search_tool": CostModel("search_tool", base_time=0.08,
+                                 slope_time=1e-4, scalable=False,
+                                 max_useful_devices=2),
+        "reward": CostModel("reward", base_time=0.01, slope_time=1e-5),
+        "train": CostModel("train", base_time=0.1, slope_time=1e-3,
+                           onload_time=0.4, offload_time=0.3),
+    }
+
+
 class SearchToolWorker:
     """The search server: topic -> fact token (its current answer digit).
     refresh() re-randomizes the corpus — the anti-memorization device."""
@@ -82,24 +119,8 @@ def main(argv=None):
         return tok.astype(jnp.int32), token_logprobs(last, tok)
 
     # ---- workflow graph: policy <-> tool cycle + reward + train ----
-    g = FlowGraph()
-    for w in ("policy_gen", "search_tool", "reward", "train"):
-        g.add_worker(w)
-    g.add_edge("policy_gen", "search_tool")
-    g.add_edge("search_tool", "policy_gen")  # the tool loop
-    g.add_edge("policy_gen", "reward")
-    g.add_edge("reward", "train")
-    profiles = {
-        "policy_gen": CostModel("policy_gen", base_time=0.05,
-                                slope_time=2e-3, onload_time=0.2,
-                                offload_time=0.2),
-        "search_tool": CostModel("search_tool", base_time=0.08,
-                                 slope_time=1e-4, scalable=False,
-                                 max_useful_devices=2),
-        "reward": CostModel("reward", base_time=0.01, slope_time=1e-5),
-        "train": CostModel("train", base_time=0.1, slope_time=1e-3,
-                           onload_time=0.4, offload_time=0.3),
-    }
+    g = build_graph()
+    profiles = cost_models()
     ctl = Controller(Cluster(num_nodes=1, devices_per_node=8),
                      profiles=profiles,
                      scheduler_cfg=SchedulerConfig(

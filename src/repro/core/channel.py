@@ -70,6 +70,12 @@ class Channel:
 
     @classmethod
     def reset_all(cls) -> None:
+        """Close every live channel, then drop the registry.  Closing
+        first wakes any getter still blocked on an orphaned channel
+        (ChannelClosed) — merely clearing the registry would leave it
+        parked forever with nothing able to reach the channel again."""
+        for ch in cls._registry.values():
+            ch.close()
         cls._registry.clear()
 
     # -- producer ----------------------------------------------------------
@@ -305,6 +311,28 @@ class AsyncQueue:
         return self._consumer_version
 
 
+# Optional observer for DeviceLock wait/grant/release events (an object
+# with .record(kind, lock_name, worker, rank)).  Armed by tests through
+# set_lock_observer(analysis.LockOrderRecorder()) to validate the static
+# concurrency model against the real interleaving; None in production.
+_lock_observer: Optional[Any] = None
+
+
+def set_lock_observer(observer: Optional[Any]) -> Optional[Any]:
+    """Install (or clear, with None) the global DeviceLock observer.
+    Returns the previous observer so callers can restore it."""
+    global _lock_observer
+    prev = _lock_observer
+    _lock_observer = observer
+    return prev
+
+
+def _notify_lock(kind: str, lock: str, worker: str, rank: int) -> None:
+    obs = _lock_observer
+    if obs is not None:
+        obs.record(kind, lock, worker, rank)
+
+
 class DeviceLock:
     """Distributed device lock with data-dependency acquisition priority.
 
@@ -348,6 +376,7 @@ class DeviceLock:
         deadline = time.time() + timeout if timeout else None
         with self._cv:
             self._waiting[worker] = self._rank.get(worker, 0)
+            _notify_lock("wait", self.name, worker, self._waiting[worker])
             try:
                 while True:
                     lowest = min(self._waiting.values())
@@ -356,10 +385,14 @@ class DeviceLock:
                         break
                     remaining = (deadline - time.time()) if deadline else None
                     if remaining is not None and remaining <= 0:
+                        _notify_lock("leave", self.name, worker,
+                                     self._waiting[worker])
                         return False
                     self._cv.wait(timeout=remaining)
                 self._holder = worker
                 self.acquisitions += 1
+                _notify_lock("grant", self.name, worker,
+                             self._rank.get(worker, 0))
                 needs_switch = (
                     self._last_holder != worker
                     and self._shares_devices(self._last_holder, worker)
@@ -381,6 +414,8 @@ class DeviceLock:
             assert self._holder == worker, (self._holder, worker)
             self._last_holder = worker
             self._holder = None
+            _notify_lock("release", self.name, worker,
+                         self._rank.get(worker, 0))
             self._cv.notify_all()
 
     def __enter__(self):  # bare context-manager use (tests)

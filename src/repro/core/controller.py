@@ -50,6 +50,9 @@ class ExecutionPlan:
     # graph, and so the placement column binds the MEMBER workers (the
     # real ones) instead of the synthetic collapsed name.
     members: Dict[str, Tuple[str, ...]] = field(default_factory=dict)
+    # the graph this plan was derived from, carried so strict-mode
+    # analysis (and tooling) can lint plan + graph together
+    graph: Optional[Any] = field(default=None, repr=False)
 
     def pretty(self) -> str:
         lines = [f"mode={self.mode} est={self.est_time:.2f}s"]
@@ -64,10 +67,15 @@ class Controller:
     def __init__(self, cluster: Cluster,
                  profiles: Optional[Dict[str, CostModel]] = None,
                  scheduler_cfg: Optional[SchedulerConfig] = None,
-                 heartbeat: Optional[Any] = None):
+                 heartbeat: Optional[Any] = None,
+                 strict: bool = False):
         self.cluster = cluster
         self.profiles = profiles or {}
         self.scheduler_cfg = scheduler_cfg or SchedulerConfig()
+        # strict=True runs flowlint Pass 1-2 on every plan inside
+        # execute() and rejects it (FlowLintError) BEFORE any worker is
+        # bound or run
+        self.strict = strict
         self.tracer = GraphTracer()
         self.router = global_router()
         self.placement_manager = PlacementManager(cluster)
@@ -123,7 +131,7 @@ class Controller:
         members = self._cycle_members(graph)
         placement = self._place(sched, avail, members)
         return ExecutionPlan(schedule=sched, est_time=t, placement=placement,
-                             mode=mode, members=members)
+                             mode=mode, members=members, graph=graph)
 
     def plan_async(self, graph: FlowGraph, *, total_batch: int,
                    iterations: int = 8,
@@ -143,7 +151,7 @@ class Controller:
         members = self._cycle_members(graph)
         placement = self._place(sched, avail, members)
         return ExecutionPlan(schedule=sched, est_time=t, placement=placement,
-                             mode=mode, members=members)
+                             mode=mode, members=members, graph=graph)
 
     @staticmethod
     def _cycle_members(graph: FlowGraph) -> Dict[str, Tuple[str, ...]]:
@@ -206,9 +214,27 @@ class Controller:
         """Measured context-switch costs (worker -> onload/offload s)."""
         return self._switcher.measured if self._switcher else {}
 
+    def _lint(self, plan: ExecutionPlan,
+              cycle_specs: Optional[Dict[str, Any]]) -> None:
+        """Strict mode: flowlint Pass 1-2 over the plan (and the graph
+        it was derived from, if it carries one).  Raises FlowLintError
+        on any error-severity finding — before bind_placement, so a
+        corrupted plan never touches a worker or a device.  Imported
+        lazily: analysis depends on core, never the reverse."""
+        from repro.analysis import analyze, filter_findings
+        from repro.analysis.findings import FlowLintError
+        findings = analyze(getattr(plan, "graph", None), plan,
+                           cluster=self.cluster, cfg=self.scheduler_cfg,
+                           cycle_specs=cycle_specs)
+        errors = filter_findings(findings, "error")
+        if errors:
+            raise FlowLintError(errors)
+
     def execute(self, plan: ExecutionPlan, workers: Dict[str, Any],
                 task_fns: Dict[str, Callable], batch,
                 cycle_specs: Optional[Dict[str, Any]] = None) -> Any:
+        if self.strict:
+            self._lint(plan, cycle_specs)
         self.bind_placement(plan, workers)
         # one switcher per (workers, profiles) pair so measured switch
         # costs accumulate (and keep feeding the CostModels) across

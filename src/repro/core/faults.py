@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
@@ -121,22 +122,64 @@ class HeartbeatMonitor:
 
     ``clock`` is injectable so tests advance time explicitly instead of
     sleeping.
+
+    Straggler detection rides on the same beats: every beat records the
+    interval since the worker's previous beat (bounded history), and
+    :meth:`suspects` surfaces workers whose *current* silence already
+    dwarfs their own recorded cadence — slow-but-alive workers, long
+    before the hard ``timeout`` declares them dead.
     """
+
+    # beat intervals kept per worker for the straggler percentile
+    HISTORY = 256
 
     def __init__(self, timeout: float = 30.0,
                  clock: Callable[[], float] = time.monotonic):
         self.timeout = timeout
         self._clock = clock
         self._last: Dict[str, float] = {}
+        self._intervals: Dict[str, deque] = {}
         self._lock = threading.Lock()
 
     def beat(self, worker: str) -> None:
         with self._lock:
-            self._last[worker] = self._clock()
+            now = self._clock()
+            prev = self._last.get(worker)
+            if prev is not None:
+                self._intervals.setdefault(
+                    worker, deque(maxlen=self.HISTORY)).append(now - prev)
+            self._last[worker] = now
 
     def last_beat(self, worker: str) -> Optional[float]:
         with self._lock:
             return self._last.get(worker)
+
+    def intervals(self, worker: str) -> List[float]:
+        with self._lock:
+            return list(self._intervals.get(worker, ()))
+
+    def suspects(self, percentile: float = 95.0,
+                 factor: float = 3.0,
+                 min_history: int = 3) -> List[str]:
+        """Workers whose current silence exceeds ``factor`` times their
+        own ``percentile``-th beat interval — stragglers, surfaced while
+        still under the hard ``timeout``.  Workers with fewer than
+        ``min_history`` recorded intervals have no cadence to compare
+        against and are never suspected."""
+        now = self._clock()
+        out = []
+        with self._lock:
+            for w, last in self._last.items():
+                hist = self._intervals.get(w)
+                if hist is None or len(hist) < min_history:
+                    continue
+                ordered = sorted(hist)
+                k = min(len(ordered) - 1,
+                        int(len(ordered) * percentile / 100.0))
+                typical = ordered[k]
+                if now - last > factor * max(typical, 1e-9):
+                    out.append(w)
+        return sorted(out)
 
     def silent(self) -> List[str]:
         """Workers whose last beat is older than ``timeout``."""
@@ -155,3 +198,4 @@ class HeartbeatMonitor:
     def reset(self) -> None:
         with self._lock:
             self._last = {}
+            self._intervals = {}

@@ -29,6 +29,52 @@ from repro.core.scheduler import Async, Leaf, Pipelined, Temporal, leaves
 from repro.core.worker import WorkerFailure
 
 
+# Bound on every executor-internal join: a worker thread that has not
+# finished within this window is wedged, and we want a typed error, not
+# a silent hang (or a daemon thread leaking across recoveries).
+JOIN_TIMEOUT = 120.0
+
+# thread-name prefixes the executor owns (leak detection scans these)
+_THREAD_PREFIXES = ("pipe-prod", "pipe-cons", "cycle-member-",
+                    "async-producer", "ctx-prefetch")
+
+
+class ThreadLeakError(RuntimeError):
+    """An executor thread outlived its join window — a wedged producer/
+    consumer/cycle-member (or one leaked across a recovery teardown)."""
+
+    def __init__(self, names: Sequence[str], context: str):
+        self.thread_names = list(names)
+        super().__init__(
+            f"{context}: thread(s) {sorted(self.thread_names)} still "
+            f"alive after {JOIN_TIMEOUT:.0f}s join timeout")
+
+
+def _join_all(threads: Sequence[threading.Thread],
+              timeout: float = JOIN_TIMEOUT) -> List[threading.Thread]:
+    """Join every thread within one shared ``timeout`` budget; returns
+    the ones still alive (empty = clean join)."""
+    deadline = time.monotonic() + timeout
+    for th in threads:
+        th.join(timeout=max(deadline - time.monotonic(), 0.0))
+    return [th for th in threads if th.is_alive()]
+
+
+def assert_no_leaked_threads(grace: float = 1.0) -> None:
+    """Post-teardown hygiene check (WorkflowRunner.teardown): no
+    executor-owned thread may survive the run.  Each suspect gets a
+    short grace join (it may be mid-exit); anything still alive raises
+    :class:`ThreadLeakError`."""
+    suspects = [th for th in threading.enumerate()
+                if th.is_alive()
+                and any(th.name.startswith(p) for p in _THREAD_PREFIXES)]
+    for th in suspects:
+        th.join(timeout=grace)
+    leaked = [th.name for th in suspects if th.is_alive()]
+    if leaked:
+        raise ThreadLeakError(leaked, "teardown leaked executor threads")
+
+
 def leading_leaves(sched) -> List[Leaf]:
     """The leaves that run FIRST under a schedule node — the set a
     context switch must onload at a Temporal cut.  Nested temporal
@@ -284,7 +330,10 @@ class ExecutionFlowManager:
                 and not set(getattr(w, "devices", ())).isdisjoint(t_devs)]
             if self.switcher is not None:
                 if pre is not None:
-                    pre.join()
+                    pre.join(timeout=JOIN_TIMEOUT)
+                    if pre.is_alive():
+                        raise ThreadLeakError(
+                            [pre.name], "context-prefetch wedged")
                 self.switcher.switch(outgoing, incoming)
             else:
                 for name in outgoing:
@@ -339,12 +388,22 @@ class ExecutionFlowManager:
                         e.step = i
                     err.append(e)
 
-            tp = threading.Thread(target=producer, daemon=True)
-            tc = threading.Thread(target=consumer, daemon=True)
+            tp = threading.Thread(target=producer, daemon=True,
+                                  name=f"pipe-prod-{id(sched)}")
+            tc = threading.Thread(target=consumer, daemon=True,
+                                  name=f"pipe-cons-{id(sched)}")
             tp.start(); tc.start()
-            tp.join(); tc.join()
+            leaked = _join_all([tp, tc])
+            if leaked:
+                # wake whichever side is parked on the channel, then give
+                # it a moment to unwind before declaring the leak
+                ch.close()
+                leaked = _join_all(leaked, timeout=5.0)
             if err:
                 raise err[0]
+            if leaked:
+                raise ThreadLeakError([th.name for th in leaked],
+                                      "Pipelined stage wedged")
             done = [r for r in results if r is not None]
             return coalesce(done) if done else {}
 
@@ -486,14 +545,22 @@ class ExecutionFlowManager:
             close_all()
             raise
         threads = [threading.Thread(target=member_loop, args=(i,),
-                                    daemon=True) for i in range(k)]
+                                    daemon=True,
+                                    name=f"cycle-member-{spec.order[i]}")
+                   for i in range(k)]
         for th in threads:
             th.start()
-        for th in threads:
-            th.join()
+        leaked = _join_all(threads)
         close_all()
+        if leaked:
+            # closing the ring wakes members parked on a get; a member
+            # still alive after that is genuinely wedged
+            leaked = _join_all(leaked, timeout=5.0)
         if err:
             raise err[0]
+        if leaked:
+            raise ThreadLeakError([th.name for th in leaked],
+                                  "hybrid cycle ring wedged")
         chunk_results = [(spec.collect or stack_cycle_steps)(o)
                          for o in outs]
         return merge_cycle_chunks(chunk_results)
@@ -586,7 +653,8 @@ class AsyncPipelineDriver:
             finally:
                 self.queue.close()
 
-        th = threading.Thread(target=producer, daemon=True)
+        th = threading.Thread(target=producer, daemon=True,
+                              name=f"async-producer-{id(self)}")
         th.start()
         try:
             for _ in range(iterations):
@@ -598,7 +666,11 @@ class AsyncPipelineDriver:
                 self.queue.advance_consumer(self.queue.consumer_version + 1)
         finally:
             self.queue.close()
-            th.join()
+            th.join(timeout=JOIN_TIMEOUT)
+        # surface the root cause first: a producer that died explains a
+        # wedged queue far better than the leak it caused
         if self._producer_err:
             raise self._producer_err[0]
+        if th.is_alive():
+            raise ThreadLeakError([th.name], "async producer wedged")
         return self.results

@@ -95,6 +95,27 @@ class EmbodiedIterStats:
     metrics: Dict[str, float] = field(default_factory=dict)
 
 
+def embodied_graph() -> FlowGraph:
+    """The embodied workflow graph (module-level so tooling — flowlint,
+    benchmarks — can build it without constructing a runner)."""
+    g = FlowGraph()
+    for w in ("simulator", "policy_gen", "advantage", "train"):
+        g.add_worker(w)
+    g.add_edge("simulator", "policy_gen")
+    g.add_edge("policy_gen", "simulator")  # the cycle
+    g.add_edge("policy_gen", "advantage")
+    g.add_edge("advantage", "train")
+    return g
+
+
+def embodied_cycle_specs(horizon: int = 8,
+                         chunks: int = 2) -> Dict[str, CycleSpec]:
+    name = cycle_node_name(("policy_gen", "simulator"))
+    return {name: CycleSpec(order=("policy_gen", "simulator"),
+                            steps=horizon, prime="simulator",
+                            chunks=chunks)}
+
+
 class EmbodiedPPORunner(WorkflowRunner):
     """simulator↔policy cycle + advantage + train through the runtime."""
 
@@ -165,20 +186,11 @@ class EmbodiedPPORunner(WorkflowRunner):
         }
 
     def build_graph(self) -> FlowGraph:
-        g = FlowGraph()
-        for w in ("simulator", "policy_gen", "advantage", "train"):
-            g.add_worker(w)
-        g.add_edge("simulator", "policy_gen")
-        g.add_edge("policy_gen", "simulator")  # the cycle
-        g.add_edge("policy_gen", "advantage")
-        g.add_edge("advantage", "train")
-        return g
+        return embodied_graph()
 
     def cycle_specs(self) -> Dict[str, CycleSpec]:
-        name = cycle_node_name(("policy_gen", "simulator"))
-        return {name: CycleSpec(order=("policy_gen", "simulator"),
-                                steps=self.rl.horizon, prime="simulator",
-                                chunks=self.rl.cycle_chunks)}
+        return embodied_cycle_specs(horizon=self.rl.horizon,
+                                    chunks=self.rl.cycle_chunks)
 
     def resume_trainer_checkpoint(self) -> int:
         start = super().resume_trainer_checkpoint()

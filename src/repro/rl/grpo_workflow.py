@@ -42,6 +42,19 @@ from repro.train.trainer import TrainHParams
 WORKFLOW_ORDER = ("rollout", "inference", "reward", "actor")
 
 
+def grpo_graph() -> FlowGraph:
+    """The GRPO chain graph (module-level so tooling — flowlint,
+    benchmarks — can build it without constructing a runner)."""
+    graph = FlowGraph()
+    prev = None
+    for name in WORKFLOW_ORDER:
+        graph.add_worker(name)
+        if prev is not None:
+            graph.add_edge(prev, name, channel=f"{prev}->{name}")
+        prev = name
+    return graph
+
+
 @dataclass
 class GRPOConfig:
     batch_size: int = 32
@@ -140,14 +153,7 @@ class GRPORunner(WorkflowRunner):
         }
 
     def build_graph(self) -> FlowGraph:
-        graph = FlowGraph()
-        prev = None
-        for name in WORKFLOW_ORDER:
-            graph.add_worker(name)
-            if prev is not None:
-                graph.add_edge(prev, name, channel=f"{prev}->{name}")
-            prev = name
-        return graph
+        return grpo_graph()
 
     def make_batch(self) -> Dict[str, np.ndarray]:
         return self._expand_groups(self.data.next_batch())

@@ -237,6 +237,26 @@ class PPOIterStats:
     metrics: Dict[str, float] = field(default_factory=dict)
 
 
+def rlhf_graph() -> FlowGraph:
+    """The 6-node RLHF diamond (module-level so tooling — flowlint,
+    benchmarks — can build it without constructing a runner);
+    critic_v → reward encodes the data dependency of GAE on values."""
+    g = FlowGraph()
+    for w in ("rollout", "inference", "reference", "critic_v", "reward",
+              "actor"):
+        g.add_worker(w)
+    g.add_edge("rollout", "inference")
+    g.add_edge("rollout", "reference")
+    g.add_edge("rollout", "critic_v")
+    g.add_edge("rollout", "reward")
+    g.add_edge("critic_v", "reward")
+    g.add_edge("inference", "actor")
+    g.add_edge("reference", "actor")
+    g.add_edge("critic_v", "actor")
+    g.add_edge("reward", "actor")
+    return g
+
+
 class RLHFRunner(WorkflowRunner):
     """actor+critic+reference+reward PPO over the M2Flow runtime.
 
@@ -311,23 +331,8 @@ class RLHFRunner(WorkflowRunner):
             "actor": lambda w, c: w.train(c),
         }
 
-    # the 6-node RLHF workflow graph (for the scheduler/benchmarks);
-    # critic_v → reward encodes the data dependency of GAE on values
     def build_graph(self) -> FlowGraph:
-        g = FlowGraph()
-        for w in ("rollout", "inference", "reference", "critic_v", "reward",
-                  "actor"):
-            g.add_worker(w)
-        g.add_edge("rollout", "inference")
-        g.add_edge("rollout", "reference")
-        g.add_edge("rollout", "critic_v")
-        g.add_edge("rollout", "reward")
-        g.add_edge("critic_v", "reward")
-        g.add_edge("inference", "actor")
-        g.add_edge("reference", "actor")
-        g.add_edge("critic_v", "actor")
-        g.add_edge("reward", "actor")
-        return g
+        return rlhf_graph()
 
     def make_batch(self) -> Dict[str, np.ndarray]:
         return dict(self.data.next_batch())

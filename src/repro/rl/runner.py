@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.comm.resharding import timed_weight_sync, transfer_stats
 from repro.core import Cluster, Controller, FlowGraph, Profiler, SchedulerConfig
+from repro.core.pipeline import assert_no_leaked_threads
 from repro.core.profiler import CostModel, fit_tail_factor, measure_onoffload
 from repro.core.worker import WorkerFailure
 
@@ -303,6 +304,9 @@ class WorkflowRunner:
         self.controller.reset_failures()
         self.plan = None
         self._graph = None
+        # a wedged executor thread surviving teardown would silently
+        # leak across recoveries — make it a typed error instead
+        assert_no_leaked_threads()
 
     def recover(self, verbose: bool = True) -> int:
         """Re-establish the run after a WorkerFailure; returns the

@@ -372,3 +372,79 @@ def test_broadcast_cross_device_hosts_leaves_once():
     assert far1["w"] is far2["w"]
     st = r.stats()
     assert st["src->far1"]["bytes"] == st["src->far2"]["bytes"] == 16
+
+
+# ---------------------------------------------------------------------------
+# teardown hygiene (satellites): reset_all closes live channels, and the
+# executor's thread-leak check catches wedged threads by name
+# ---------------------------------------------------------------------------
+def test_reset_all_closes_live_channels_and_wakes_getters():
+    ch = Channel.create("orphaned")
+    outcome = []
+
+    def getter():
+        try:
+            ch.get(timeout=30.0)
+            outcome.append("item")
+        except ChannelClosed:
+            outcome.append("closed")
+
+    th = threading.Thread(target=getter)
+    th.start()
+    time.sleep(0.05)  # let the getter park on the empty channel
+    Channel.reset_all()
+    th.join(timeout=5.0)
+    assert not th.is_alive(), "reset_all left a getter blocked"
+    assert outcome == ["closed"]
+    assert ch.closed
+    with pytest.raises(KeyError):
+        Channel.get_channel("orphaned")
+
+
+def test_assert_no_leaked_threads_passes_when_clean():
+    from repro.core.pipeline import assert_no_leaked_threads
+
+    assert_no_leaked_threads(grace=0.01)
+
+
+def test_assert_no_leaked_threads_flags_wedged_executor_thread():
+    from repro.core.pipeline import ThreadLeakError, assert_no_leaked_threads
+
+    stop = threading.Event()
+    th = threading.Thread(target=stop.wait, name="pipe-prod-leaktest",
+                          daemon=True)
+    th.start()
+    try:
+        with pytest.raises(ThreadLeakError) as ei:
+            assert_no_leaked_threads(grace=0.05)
+        assert ei.value.thread_names == ["pipe-prod-leaktest"]
+    finally:
+        stop.set()
+        th.join(timeout=5.0)
+    assert_no_leaked_threads(grace=0.5)  # clean again once it exited
+
+
+def test_runner_teardown_runs_leak_check(tmp_path):
+    from repro.core.pipeline import ThreadLeakError
+    from repro.rl.runner import WorkflowRunner
+
+    stop = threading.Event()
+    th = threading.Thread(target=stop.wait, name="cycle-member-leaktest",
+                          daemon=True)
+    th.start()
+    try:
+        import types
+
+        runner = WorkflowRunner.__new__(WorkflowRunner)
+        runner.workers = {}
+        runner.cluster = Cluster(num_nodes=1, devices_per_node=2)
+        runner.controller = types.SimpleNamespace(
+            placement_manager=types.SimpleNamespace(
+                release_all=lambda: None),
+            _switcher=None, profiles={},
+            reset_failures=lambda: None)
+        with pytest.raises(ThreadLeakError):
+            runner.teardown()
+    finally:
+        stop.set()
+        th.join(timeout=5.0)

@@ -128,6 +128,46 @@ def test_heartbeat_monitor_flags_silent_workers():
     assert hb.silent() == []
 
 
+def test_heartbeat_straggler_suspects_use_own_cadence():
+    t = [0.0]
+    hb = HeartbeatMonitor(timeout=1000.0, clock=lambda: t[0])
+    # a and b both beat once per second...
+    for i in range(6):
+        t[0] = float(i)
+        hb.beat("a")
+        hb.beat("b")
+    assert hb.intervals("a") == [1.0] * 5
+    assert hb.suspects() == []
+    # ...then a falls silent while b keeps its cadence
+    for i in range(6, 12):
+        t[0] = float(i)
+        hb.beat("b")
+    assert hb.suspects() == ["a"]  # 6s silence vs a ~1s cadence
+    assert hb.silent() == []       # still far under the hard timeout
+    hb.reset()
+    assert hb.intervals("a") == []
+    assert hb.suspects() == []
+
+
+def test_heartbeat_straggler_needs_history_and_tolerates_slow_beats():
+    t = [0.0]
+    hb = HeartbeatMonitor(timeout=1000.0, clock=lambda: t[0])
+    hb.beat("young")
+    t[0] = 500.0
+    # one beat = no recorded intervals: no cadence to compare against
+    assert hb.suspects() == []
+    # a worker whose cadence includes occasional slow beats: the
+    # percentile absorbs them instead of flagging every pause
+    for dt in (1.0, 1.0, 1.0, 1.0, 9.0):
+        t[0] += dt
+        hb.beat("bursty")
+    last = t[0]
+    t[0] = last + 10.0   # within 3 * p95 (= 27s) of its own history
+    assert "bursty" not in hb.suspects()
+    t[0] = last + 28.0   # beyond it
+    assert hb.suspects() == ["bursty"]
+
+
 def test_executor_beats_heartbeat_around_tasks():
     hb = HeartbeatMonitor(timeout=60.0)
     mgr = ExecutionFlowManager({"a": _StubWorker("a")},
