@@ -1,6 +1,17 @@
 """Figs. 11-13 analogue: per-component latency breakdown of the chosen
-schedules (Gantt spans from the event simulator)."""
+schedules, emitted through the obs layer.
+
+The simulator's Gantt spans are replayed into a Tracer
+(``obs.report.replay_sim``) and summarized by the same plan-vs-actual
+report the runtime uses, so benchmark and runtime accounting share one
+code path: per-mode phase fractions come from the report's drift table,
+bubble/busy fractions from its device utilization, and ``--trace-out``
+writes the simulated timeline as a Chrome-trace artifact.
+"""
 from __future__ import annotations
+
+import argparse
+from types import SimpleNamespace
 
 from benchmarks.common import emit, reasoning_profiles
 from benchmarks.bench_exec_modes import grpo_graph
@@ -11,9 +22,30 @@ from repro.core import (
     collocated_schedule,
     disaggregated_schedule,
 )
+from repro.obs import MetricsRegistry, format_snapshot
+from repro.obs.report import plan_vs_actual, replay_sim
 
 
-def run(tail_factor: float = 4.9) -> None:
+def _placement(sched, devices):
+    """Device slices per worker, mirroring Controller._place for the
+    simple (cycle-free) schedules this benchmark builds."""
+    from repro.core.scheduler import Async, Leaf, Pipelined, Temporal
+    out = {}
+    if isinstance(sched, Leaf):
+        out[sched.worker] = devices[: sched.devices] or devices
+        return out
+    if isinstance(sched, Temporal):
+        out.update(_placement(sched.s, devices))
+        out.update(_placement(sched.t, devices))
+        return out
+    if isinstance(sched, (Pipelined, Async)):
+        out.update(_placement(sched.s, devices[:sched.n_s]))
+        out.update(_placement(sched.t, devices[sched.n_s:]))
+        return out
+    raise TypeError(type(sched))
+
+
+def run(tail_factor: float = 4.9, trace_out: str | None = None) -> dict:
     profiles = reasoning_profiles(7.0, tail_factor=tail_factor)
     g = grpo_graph()
     n, M = 64, 512
@@ -25,12 +57,31 @@ def run(tail_factor: float = 4.9) -> None:
         total_batch=M, device_quantum=4, granularity_divisors=(1, 2, 4, 8, 16)))
     plans["auto"] = sch.schedule(g, n, M)
 
+    reg = MetricsRegistry()
+    reports = {}
     for mode, (t, sched) in plans.items():
         res = Simulator(profiles).run(sched, M)
-        bd = res.breakdown()
-        total = res.makespan
-        parts = ";".join(f"{k}={v / total:.0%}" for k, v in sorted(bd.items()))
-        emit(f"breakdown.{mode}", 0.0, f"iter={total:.1f}s;{parts}")
+        placement = _placement(sched, list(range(n)))
+        tracer = replay_sim(res, placement=placement)
+        plan = SimpleNamespace(schedule=sched, placement=placement,
+                               members={})
+        rep = plan_vs_actual(plan, profiles, tracer, M, sim=res)
+        reports[mode] = rep
+        reg.gauge(f"breakdown/{mode}/iter_s").set(res.makespan)
+        reg.gauge(f"breakdown/{mode}/bubble_frac").set(rep.bubble_fraction())
+        for row in rep.drift:
+            reg.gauge(f"breakdown/{mode}/frac/{row.worker}").set(
+                row.predicted_s / max(res.makespan, 1e-9))
+        parts = ";".join(
+            f"{row.worker}={row.predicted_s / res.makespan:.0%}"
+            for row in sorted(rep.drift, key=lambda r: r.worker))
+        emit(f"breakdown.{mode}", 0.0,
+             f"iter={res.makespan:.1f}s;bubble={rep.bubble_fraction():.0%};"
+             f"{parts}")
+        if trace_out:
+            path = f"{trace_out}.{mode}.trace.json"
+            tracer.export(path)
+            emit(f"breakdown.{mode}.trace", 0.0, path)
         # rollout wall-time inflation under disaggregation (paper Fig. 12:
         # 40/64 GPUs -> rollout only +14%)
         if mode == "disaggregated":
@@ -40,6 +91,16 @@ def run(tail_factor: float = 4.9) -> None:
             emit("breakdown.fig12_rollout_inflation", 0.0,
                  f"{roll_dis / max(roll_col, 1e-9):.2f}x_(paper~1.14x)")
 
+    for line in format_snapshot(reg.snapshot()):
+        print(line)
+    return reports
+
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tail-factor", type=float, default=4.9)
+    ap.add_argument("--trace-out", default=None, metavar="PREFIX",
+                    help="also export each mode's simulated timeline as "
+                         "PREFIX.<mode>.trace.json")
+    a = ap.parse_args()
+    run(a.tail_factor, a.trace_out)

@@ -17,6 +17,9 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
 
 def reshard(tree: Any, shardings: Any) -> Any:
     """device_put every leaf to its destination sharding (async)."""
@@ -51,4 +54,15 @@ def timed_weight_sync(params: Any, dst_shardings: Any
     t0 = time.perf_counter()
     out = reshard(params, dst_shardings)
     jax.block_until_ready(out)
-    return out, time.perf_counter() - t0
+    t1 = time.perf_counter()
+    tr = _trace.active()
+    if tr is not None:
+        stats = transfer_stats(params)
+        tr.add("weight-sync", "sync", t0, t1, bytes=stats["bytes"],
+               arrays=int(stats["arrays"]))
+        reg = _metrics.active()
+        if reg is not None:
+            reg.counter("sync/count").inc()
+            reg.counter("sync/bytes").inc(stats["bytes"])
+            reg.histogram("sync/seconds").observe(t1 - t0)
+    return out, t1 - t0

@@ -16,6 +16,32 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
+
+def _chan_family(name: str) -> str:
+    """Metric key for a channel: anonymous per-run channels (pipe-…,
+    cycle-…) collapse onto their family so the registry stays bounded."""
+    head = name.split("-", 1)[0]
+    return head if head in ("pipe", "cycle") else name
+
+
+def _record_block(kind: str, name: str, t0: float, t1: float,
+                  depth: int) -> None:
+    """One blocked put/get: span (cat=channel-wait, feeds the report's
+    gap attribution) + block-seconds counter + depth gauge."""
+    tr = _trace.active()
+    if tr is None:
+        return
+    tr.add(f"{kind}-wait", "channel-wait", t0, t1, channel=name)
+    reg = _metrics.active()
+    if reg is not None:
+        fam = _chan_family(name)
+        reg.counter(f"channel/{fam}/{kind}_block_s").inc(t1 - t0)
+        reg.histogram(f"channel/{fam}/{kind}_block_s_hist").observe(t1 - t0)
+        reg.gauge(f"channel/{fam}/depth").set(depth)
+
 
 @dataclass(order=True)
 class _Item:
@@ -83,8 +109,15 @@ class Channel:
         with self._cv:
             if self._closed:
                 raise ChannelClosed(self.name)
-            while self.capacity and len(self._q) >= self.capacity:
-                self._cv.wait()
+            if self.capacity and len(self._q) >= self.capacity:
+                # back-pressure path: time the wait only when we block
+                tr = _trace.active()
+                t0 = tr.clock() if tr is not None else 0.0
+                while self.capacity and len(self._q) >= self.capacity:
+                    self._cv.wait()
+                if tr is not None:
+                    _record_block("put", self.name, t0, tr.clock(),
+                                  len(self._q))
             item = _Item(sort_key=self._seq, seq=self._seq, data=data,
                          weight=weight)
             self._seq += 1
@@ -103,13 +136,24 @@ class Channel:
             timeout: Optional[float] = None) -> Any:
         deadline = time.time() + timeout if timeout else None
         with self._cv:
-            while not self._q:
-                if self._closed:
-                    raise ChannelClosed(self.name)
-                remaining = (deadline - time.time()) if deadline else None
-                if remaining is not None and remaining <= 0:
-                    raise queue.Empty()
-                self._cv.wait(timeout=remaining)
+            if not self._q:
+                tr = _trace.active()
+                t0 = tr.clock() if tr is not None else 0.0
+                try:
+                    while not self._q:
+                        if self._closed:
+                            raise ChannelClosed(self.name)
+                        remaining = ((deadline - time.time())
+                                     if deadline else None)
+                        if remaining is not None and remaining <= 0:
+                            raise queue.Empty()
+                        self._cv.wait(timeout=remaining)
+                finally:
+                    # starvation on a closed/empty channel is still wait
+                    # time the consumer paid — record it either way
+                    if tr is not None:
+                        _record_block("get", self.name, t0, tr.clock(),
+                                      len(self._q))
             if policy is not None:
                 datas = [it.data for it in sorted(self._q)]
                 idx = policy(datas)

@@ -36,6 +36,7 @@ from repro.core.scheduler import (
 from repro.core.simulator import Simulator
 from repro.core.switching import ContextSwitcher
 from repro.core.worker import Worker, WorkerFailure, WorkerGroup
+from repro.obs import trace as _trace
 
 
 @dataclass
@@ -248,7 +249,13 @@ class Controller:
                                    cycle_specs=cycle_specs,
                                    heartbeat=self.heartbeat,
                                    on_failure=self.report_failure)
-        out = mgr.run(plan.schedule, batch)
+        tr = _trace.active()
+        if tr is not None:
+            with tr.span("execute", "phase", mode=plan.mode,
+                         est_time=plan.est_time):
+                out = mgr.run(plan.schedule, batch)
+        else:
+            out = mgr.run(plan.schedule, batch)
         self.last_timeline = mgr.timeline
         self.last_time = mgr.total_time
         self.last_cycle_log = mgr.cycle_log

@@ -158,6 +158,20 @@ class HeartbeatMonitor:
         with self._lock:
             return list(self._intervals.get(worker, ()))
 
+    def interval_percentile(self, worker: str,
+                            percentile: float = 95.0) -> Optional[float]:
+        """The ``percentile``-th recorded beat interval for ``worker``
+        (None with no history) — the per-worker cadence number run_loop
+        publishes as a straggler gauge each iteration."""
+        with self._lock:
+            hist = self._intervals.get(worker)
+            if not hist:
+                return None
+            ordered = sorted(hist)
+            k = min(len(ordered) - 1,
+                    int(len(ordered) * percentile / 100.0))
+            return ordered[k]
+
     def suspects(self, percentile: float = 95.0,
                  factor: float = 3.0,
                  min_history: int = 3) -> List[str]:

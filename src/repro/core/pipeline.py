@@ -27,6 +27,7 @@ import numpy as np
 from repro.core.channel import AsyncQueue, Channel, ChannelClosed
 from repro.core.scheduler import Async, Leaf, Pipelined, Temporal, leaves
 from repro.core.worker import WorkerFailure
+from repro.obs import trace as _trace
 
 
 # Bound on every executor-internal join: a worker thread that has not
@@ -290,7 +291,15 @@ class ExecutionFlowManager:
             if self.on_failure is not None:
                 self.on_failure(f)
             raise f from e
-        self._record(worker_name, t0, time.perf_counter(), idx)
+        t1 = time.perf_counter()
+        self._record(worker_name, t0, t1, idx)
+        tr = _trace.active()
+        if tr is not None:
+            # the executor's task choke point: every worker invocation in
+            # every realization passes through here, so this one span is
+            # the whole busy timeline (timestamps reused from _record)
+            tr.add(worker_name, "task", t0, t1, worker=worker_name,
+                   chunk=idx, devices=list(getattr(w, "devices", ())))
         return out
 
     def _run(self, sched, batch: Dict) -> Dict:
@@ -360,9 +369,14 @@ class ExecutionFlowManager:
 
             def producer():
                 i = -1
+                tr = _trace.active()
                 try:
                     for i, c in enumerate(chunks):
-                        out = self._run(sched.s, c)
+                        if tr is not None:
+                            with tr.span("produce", "pipe", chunk=i):
+                                out = self._run(sched.s, c)
+                        else:
+                            out = self._run(sched.s, c)
                         ch.put((i, out))
                 except BaseException as e:  # noqa: BLE001
                     # surface producer-side failures: a silently dead
@@ -376,13 +390,18 @@ class ExecutionFlowManager:
 
             def consumer():
                 i = -1
+                tr = _trace.active()
                 try:
                     while True:
                         try:
                             i, c = ch.get()
                         except ChannelClosed:
                             break
-                        results[i] = self._run(sched.t, c)
+                        if tr is not None:
+                            with tr.span("consume", "pipe", chunk=i):
+                                results[i] = self._run(sched.t, c)
+                        else:
+                            results[i] = self._run(sched.t, c)
                 except BaseException as e:  # noqa: BLE001
                     if isinstance(e, WorkerFailure) and e.step is None:
                         e.step = i

@@ -28,6 +28,8 @@ import time
 from dataclasses import dataclass
 from typing import Any, Dict, Iterable, List, Optional, Sequence
 
+from repro.obs import trace as _trace
+
 # Cold keys leave the device first; anything unlisted (e.g. "params")
 # follows in registration order.
 OFFLOAD_KEY_ORDER = ("opt",)
@@ -70,16 +72,21 @@ class ContextSwitcher:
         keys = [k for k in OFFLOAD_KEY_ORDER if k in state_keys]
         keys += [k for k in state_keys if k not in keys]
         total, moved_any = 0.0, False
+        tr = _trace.active()
         for k in keys:
             t0 = time.perf_counter()
             moved = w.offload(keys=(k,))
-            dt = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            dt = t1 - t0
             if moved:
                 moved_any = True
                 total += dt
                 with self._lock:
                     self.records.append(
                         SwitchRecord(name, "offload", k, dt))
+                if tr is not None:
+                    tr.add(f"offload:{name}", "switch", t0, t1,
+                           worker=name, key=k)
         if moved_any:
             self._feedback(name, "offload_time", total)
         return total
@@ -91,12 +98,17 @@ class ContextSwitcher:
             return 0.0
         t0 = time.perf_counter()
         moved = w.onload()
-        dt = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        dt = t1 - t0
         if not moved:
             return 0.0
         with self._lock:
             self.records.append(
                 SwitchRecord(name, "onload", "+".join(moved), dt))
+        tr = _trace.active()
+        if tr is not None:
+            tr.add(f"onload:{name}", "switch", t0, t1,
+                   worker=name, key="+".join(moved))
         self._feedback(name, "onload_time", dt)
         return dt
 
@@ -108,8 +120,16 @@ class ContextSwitcher:
         names = list(names)
 
         def run():
-            for n in names:
-                self.onload_worker(n)
+            tr = _trace.active()
+            if tr is not None:
+                # outer span marks the whole overlapped window; per-worker
+                # onload spans nest inside it on the ctx-prefetch lane
+                with tr.span("prefetch", "switch", workers=names):
+                    for n in names:
+                        self.onload_worker(n)
+            else:
+                for n in names:
+                    self.onload_worker(n)
 
         th = threading.Thread(target=run, daemon=True,
                               name="ctx-prefetch")

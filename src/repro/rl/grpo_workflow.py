@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import Cluster, FlowGraph, SchedulerConfig
+from repro.obs import metrics as _metrics
 from repro.rl.runner import WorkflowRunner
 from repro.rl.workers import (
     ActorWorker,
@@ -202,6 +203,12 @@ class GRPORunner(WorkflowRunner):
             metrics=self.actor.metrics_history[-1]
             if self.actor.metrics_history else {})
         self.stats.append(st)
+        reg = _metrics.active()
+        if reg is not None and wall > 0:
+            tok = self.rl.batch_size * (self.rl.prompt_len
+                                        + self.rl.max_new_tokens)
+            reg.gauge("grpo/tokens_per_s").set(tok / wall)
+            reg.gauge("grpo/mean_reward").set(st.mean_reward)
         return st
 
     def log_iteration(self, st: IterationStats) -> None:

@@ -21,6 +21,7 @@ binding-placement path; a new workflow is ~five declarative hooks.
 """
 from __future__ import annotations
 
+import math
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -29,9 +30,13 @@ import numpy as np
 
 from repro.comm.resharding import timed_weight_sync, transfer_stats
 from repro.core import Cluster, Controller, FlowGraph, Profiler, SchedulerConfig
+from repro.core.faults import HeartbeatMonitor
 from repro.core.pipeline import assert_no_leaked_threads
 from repro.core.profiler import CostModel, fit_tail_factor, measure_onoffload
 from repro.core.worker import WorkerFailure
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+from repro.utils import logging as _log
 
 
 class WorkflowRunner:
@@ -92,7 +97,12 @@ class WorkflowRunner:
         self.task_fns: Dict[str, Callable] = self._arm_task_fns(
             self.build_task_fns())
         self._graph: Optional[FlowGraph] = None
-        self.controller = Controller(self.cluster)
+        # straggler observability: every task call beats the monitor
+        # (via the executor), run_loop reads the interval percentiles.
+        # The hard timeout is infinite — the monitor's job here is
+        # cadence statistics, not liveness enforcement
+        self.heartbeat = HeartbeatMonitor(timeout=math.inf)
+        self.controller = Controller(self.cluster, heartbeat=self.heartbeat)
         self.plan = None
         self.stats: List[Any] = []
         # cumulative weight-sync accounting (resharding data plane):
@@ -247,15 +257,24 @@ class WorkflowRunner:
     # ------------------------------------------------------------------
     def run_iteration(self, it: int):
         t0 = time.perf_counter()
+        tr = _trace.active()
+        if tr is not None:
+            tr.set_context(iteration=it)
         if self.fault_injector is not None:
             self.fault_injector.set_iteration(it)
-        self._sync_weights()
-        batch = self.make_batch()
-        out = self.controller.execute(
-            self.plan, self.workers, self.task_fns, batch,
-            cycle_specs=self.cycle_specs())
-        out = self.post_execute(out)
-        wall = time.perf_counter() - t0
+        try:
+            self._sync_weights()
+            batch = self.make_batch()
+            out = self.controller.execute(
+                self.plan, self.workers, self.task_fns, batch,
+                cycle_specs=self.cycle_specs())
+            out = self.post_execute(out)
+        finally:
+            wall = time.perf_counter() - t0
+            if tr is not None:
+                tr.add(f"iteration-{it}", "iteration", t0,
+                       time.perf_counter())
+                tr.set_context(iteration=None)
         return self._record_stats(it, wall, out)
 
     # ------------------------------------------------------------------
@@ -332,6 +351,30 @@ class WorkflowRunner:
                   f"resuming at iteration {start}")
         return start
 
+    def _observe_iteration(self, it: int, verbose: bool) -> None:
+        """Per-iteration observability: straggler warnings from the
+        heartbeat cadence (percentile path — the hard-timeout path only
+        catches outright hangs), the matching obs gauges, and a metrics
+        snapshot merged into verbose output while tracing is armed."""
+        suspects = self.heartbeat.suspects()
+        if suspects and verbose:
+            _log.warn("straggler",
+                      f"iteration {it}: {', '.join(suspects)} running "
+                      f"behind their own beat cadence", iteration=it)
+        reg = _metrics.active()
+        if reg is not None:
+            reg.gauge("faults/stragglers").set(len(suspects))
+            reg.counter("runner/iterations").inc()
+            reg.gauge("runner/recoveries").set(self.recoveries)
+            for name in self.workers:
+                p95 = self.heartbeat.interval_percentile(name, 95.0)
+                if p95 is not None:
+                    reg.gauge(f"faults/beat_p95_s/{name}").set(p95)
+            if verbose:
+                snap = reg.snapshot()
+                for line in _metrics.format_snapshot(snap):
+                    _log.info("metrics", line)
+
     def run_loop(self, verbose: bool = True) -> None:
         if self.plan is None:
             # allow run_loop() as the single entry point (recover() goes
@@ -354,12 +397,20 @@ class WorkflowRunner:
                     raise
                 self.recoveries += 1
                 self.recovery_log.append(f)
+                reg = _metrics.active()
+                if reg is not None:
+                    reg.counter("faults/recoveries").inc()
+                tr = _trace.active()
+                if tr is not None:
+                    tr.instant("worker-failure", "fault", worker=f.worker,
+                               step=f.step, iteration=it)
                 if verbose:
                     print(f"worker failure at iteration {it}: "
                           f"{f.worker} (step {f.step}) — recovering "
                           f"({self.recoveries}/{self.max_recoveries})")
                 it = self.recover(verbose)
                 continue
+            self._observe_iteration(it, verbose)
             if verbose:
                 self.log_iteration(st)
             if (self.checkpoint_dir and self.checkpoint_every

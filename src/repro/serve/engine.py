@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import functools
 import threading
+import time
 from collections import deque
 from typing import Any, List, NamedTuple, Optional, Sequence, Tuple
 
@@ -47,6 +48,8 @@ from repro.serve.paging import (
     init_paged_cache,
     pad_block_table,
 )
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.serve.sampling import sample_token
 from repro.serve.scheduler import RUNNING, ContinuousScheduler, Request
 
@@ -318,6 +321,13 @@ class PagedEngine:
             self.params = params
             self.weight_version = version
             self.weight_swaps += 1 + skipped
+        tr = _trace.active()
+        if tr is not None:
+            tr.instant("weight-swap", "engine", version=version,
+                       skipped=skipped)
+            reg = _metrics.active()
+            if reg is not None:
+                reg.counter("engine/weight_swaps").inc(1 + skipped)
 
     # ------------------------------------------------------------------
     # request lifecycle
@@ -389,13 +399,25 @@ class PagedEngine:
     def step(self) -> int:
         """Admit, advance every active request one token, join/evict.
         Returns the number of requests advanced."""
+        tr = _trace.active()
+        t_step = time.perf_counter() if tr is not None else 0.0
         self._apply_pending()  # before the check: update_weights() alone
         # is a valid way to deliver the initial weights
         assert self.params is not None, "engine weights not initialized"
         self.scheduler.admit(weight_version=self.weight_version)
         self._grow_pages_or_preempt()
         reqs = self.scheduler.active_requests()
+        if tr is not None:
+            util = (self.allocator.num_allocated
+                    / max(self.allocator.num_pages, 1))
+            tr.counter("engine/page_util", util)
+            reg = _metrics.active()
+            if reg is not None:
+                reg.gauge("engine/page_util").set(util)
         if not reqs:
+            if tr is not None:
+                tr.add("engine-step", "engine", t_step, time.perf_counter(),
+                       advanced=0, prefill=0, decode=0)
             return 0
         B = self.max_batch
         tokens = np.zeros((B,), np.int32)
@@ -432,6 +454,13 @@ class PagedEngine:
                     self.scheduler.finish(r)
         self.decode_steps += 1
         self.scheduler.stats.steps += 1
+        if tr is not None:
+            # num_cached already advanced: a slot still inside its prompt
+            # was a prefill (teacher-forced) step, the rest decoded
+            prefill = sum(1 for r in reqs if r.num_cached < r.prompt_len)
+            tr.add("engine-step", "engine", t_step, time.perf_counter(),
+                   advanced=len(reqs), prefill=prefill,
+                   decode=len(reqs) - prefill)
         return len(reqs)
 
     def _grow_pages_or_preempt(self) -> None:
@@ -454,6 +483,12 @@ class PagedEngine:
                     victim = max(victims, key=lambda v: v.rid) if victims \
                         else r  # r itself is youngest: it yields
                     self.scheduler.preempt(victim)
+                    tr = _trace.active()
+                    if tr is not None:
+                        tr.instant("preempt", "engine", rid=victim.rid)
+                        reg = _metrics.active()
+                        if reg is not None:
+                            reg.counter("engine/preemptions").inc()
                     if victim is r:
                         break
 
