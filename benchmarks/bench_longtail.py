@@ -131,10 +131,14 @@ def continuous_vs_static(*, fast: bool = False, out: str | None = None):
         return time.perf_counter() - t0
 
     # -- continuous: paged engine, per-request budgets, slot backfill
+    # prefix sharing OFF: the repeated timing passes re-serve the SAME
+    # prompts, so the radix cache would skip most prefill on passes 2+
+    # and the ratio would no longer measure the batching policy alone
+    # (the sharing win has its own gate: serve_batch.py --shared-prefix)
     paged_eng = PagedEngine(
         cfg, max_batch=slots, page_size=page_size,
         max_seq_len=prompt_len + max_new, max_new_tokens=max_new,
-        temperature=1.0, eos_token=-1,
+        temperature=1.0, eos_token=-1, prefix_sharing=False,
         num_pages=slots * -(-(prompt_len + max_new) // page_size) + 1)
     paged_eng.set_params(params)
     paged_eng.submit(prompts[0], max_new_tokens=2, seed=123)  # warm-up

@@ -19,10 +19,22 @@ speedup vanish (continuous batching only wins when lengths vary).
 
 Reports per-batch latency, useful tokens/s, and the response-length CDF.
 
+``--shared-prefix`` switches to the GRPO-group workload instead: every
+group is ``--group-size`` requests with an IDENTICAL prompt (the shape a
+GRPO rollout tier serves every iteration).  The same workload runs with
+prefix sharing ON and OFF; with sharing on, each group's prompt KV
+prefills once and the other members adopt the pages through the radix
+cache, so the throughput ratio measures exactly what the prefix cache
+buys.  ``--json PATH`` merges the result into an existing
+BENCH_serve.json (the bench-serve-smoke CI gate asserts the ratio).
+
 Run:  PYTHONPATH=src python examples/serve_batch.py [--requests 64]
           [--engine both] [--uniform]
+      PYTHONPATH=src python examples/serve_batch.py --shared-prefix
+          [--groups 4] [--group-size 8] [--prompt-len 64]
 """
 import argparse
+import json
 import sys
 import time
 
@@ -108,16 +120,116 @@ def report(name, wall, total_tokens, n):
           f"({total_tokens / wall:.0f} useful tok/s)\n")
 
 
+def run_shared_prefix(args):
+    """GRPO-group workload: groups of identical prompts, prefix sharing
+    on vs off.  Long prompts + short generations so prompt prefill
+    dominates — the component sharing removes."""
+    cfg = get_config("codeqwen1.5-7b").reduced().replace(
+        vocab_size=256, d_model=256, num_heads=4, num_kv_heads=2,
+        head_dim=64, d_ff=1024,
+        max_seq_len=max(128, args.prompt_len + args.max_new))
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    data = PromptDataset(args.groups, prompt_len=args.prompt_len, seed=1)
+    uniq = np.asarray(data.next_batch()["prompt_tokens"])
+    prompts = np.repeat(uniq, args.group_size, axis=0)
+    n = len(prompts)
+
+    def make_engine(sharing):
+        eng = PagedEngine(cfg, max_batch=args.batch, page_size=8,
+                          max_new_tokens=args.max_new, temperature=0.8,
+                          eos_token=-1, prefix_sharing=sharing)
+        eng.set_params(params)
+        eng.submit(prompts[0], max_new_tokens=2, seed=999)  # compile
+        eng.run()
+        eng.release_prefix_cache()  # warm-up prompt must not hit later
+        eng.allocator.pages_allocated_total = 0
+        return eng
+
+    def timed_pass(eng, rep):
+        t0 = time.time()
+        for i in range(n):
+            eng.submit(prompts[i], seed=1000 * rep + i)
+        eng.run()
+        dt = time.time() - t0
+        eng.release_prefix_cache()  # each pass starts cache-cold
+        return dt
+
+    on_eng, off_eng = make_engine(True), make_engine(False)
+    # alternate repeats so bursty CPU allocation hits both modes alike
+    wall_on, wall_off = float("inf"), float("inf")
+    for rep in range(args.repeats):
+        wall_on = min(wall_on, timed_pass(on_eng, rep))
+        wall_off = min(wall_off, timed_pass(off_eng, rep))
+
+    useful = n * (args.prompt_len + args.max_new)
+    ratio = wall_off / wall_on
+    hits = on_eng.scheduler.stats.prefix_hit_tokens
+    print(f"workload: {args.groups} groups x {args.group_size} identical "
+          f"prompts ({args.prompt_len} tokens), {args.max_new} new each")
+    print(f"pages allocated  shared={on_eng.allocator.pages_allocated_total}"
+          f"  private={off_eng.allocator.pages_allocated_total}"
+          f"  (prompt tokens skipped via cache: {hits})")
+    report("sharing on ", wall_on, useful, n)
+    report("sharing off", wall_off, useful, n)
+    print(f"shared-prefix speedup: {ratio:.2f}x")
+
+    result = {
+        "workload": {
+            "groups": args.groups, "group_size": args.group_size,
+            "prompt_len": args.prompt_len, "max_new": args.max_new,
+            "slots": args.batch, "repeats": args.repeats,
+        },
+        "sharing_on": {
+            "wall_s": wall_on, "tok_per_s": useful / wall_on,
+            "pages_allocated": on_eng.allocator.pages_allocated_total,
+            "prefix_hit_tokens": hits,
+        },
+        "sharing_off": {
+            "wall_s": wall_off, "tok_per_s": useful / wall_off,
+            "pages_allocated": off_eng.allocator.pages_allocated_total,
+        },
+        "speedup": ratio,
+    }
+    if args.json:
+        try:
+            with open(args.json) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+        merged["shared_prefix"] = result
+        with open(args.json, "w") as f:
+            json.dump(merged, f, indent=2)
+        print(f"# merged shared_prefix into {args.json}")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--max-new", type=int, default=None,
+                    help="generation budget cap (default: 48; 8 under "
+                         "--shared-prefix, where prompt prefill should "
+                         "dominate)")
     ap.add_argument("--engine", choices=("static", "paged", "both"),
                     default="both")
     ap.add_argument("--uniform", action="store_true",
                     help="same budget for every request (no long tail)")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="GRPO-group workload: identical prompts per "
+                         "group, prefix sharing on vs off")
+    ap.add_argument("--groups", type=int, default=4)
+    ap.add_argument("--group-size", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge the shared-prefix result into this "
+                         "BENCH_serve.json")
     args = ap.parse_args(argv)
+    if args.max_new is None:
+        args.max_new = 8 if args.shared_prefix else 48
+    if args.shared_prefix:
+        return run_shared_prefix(args)
     cfg, params, prompts = make_setup(args)
     budgets = make_budgets(args)
 

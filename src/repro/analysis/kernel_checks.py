@@ -191,6 +191,21 @@ def gmm_invocation(shape_name: str, *, E: int, C: int, D: int, F: int,
         ])
 
 
+def sampling_invocation(shape_name: str, *, B: int, V: int
+                        ) -> KernelInvocation:
+    """Mirrors ``fused_sample`` -> ``fused_sample_bv``: grid (B,), one
+    (1, V) logits/gumbel row per program, (1, 1) token/logprob outs."""
+    return KernelInvocation(
+        kernel="fused_sample", shape_name=shape_name,
+        grid=(B,),
+        operands=[
+            BlockMap("logits", (B, V), (1, V), lambda b: (b, 0)),
+            BlockMap("gumbel", (B, V), (1, V), lambda b: (b, 0)),
+            BlockMap("token", (B, 1), (1, 1), lambda b: (b, 0)),
+            BlockMap("lp", (B, 1), (1, 1), lambda b: (b, 0)),
+        ])
+
+
 # ---------------------------------------------------------------------------
 # Checks
 # ---------------------------------------------------------------------------
@@ -279,6 +294,7 @@ def default_invocations() -> List[KernelInvocation]:
     H, KV, D = 28, 4, 128            # dense/GQA attention dims
     ssd_H, ssd_P, ssd_N = 24, 64, 128  # mamba2 heads / head_dim / state
     page = 16                        # PagedEngine default page_size
+    vocab = 151_936                  # qwen-family padded vocab width
     out: List[KernelInvocation] = []
     for name, sc in SHAPES.items():
         S, B = sc.seq_len, sc.global_batch
@@ -287,6 +303,9 @@ def default_invocations() -> List[KernelInvocation]:
             out.append(paged_invocation(
                 name, B=B, H=H, D=D, P=B * nb + 1, page=page, KV=KV,
                 nb=nb, max_context=S))
+            # the fused sampler runs back-to-back with paged attention
+            # on every decode step, same batch extent
+            out.append(sampling_invocation(name, B=B, V=vocab))
         else:
             out.append(flash_invocation(
                 name, B=min(B, 8), H=H, S=S, D=D, KV=KV))

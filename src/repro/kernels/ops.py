@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import moe_gmm as _gmm
 from repro.kernels import paged_attention as _pa
+from repro.kernels import sampling as _samp
 from repro.kernels import ssd_scan as _ssd
 
 # interpret=True whenever we're not actually on TPU
@@ -68,3 +69,13 @@ def ssd_scan(x, dt, A, Bm, Cm, D, chunk: int):
 
 def grouped_matmul(buf, w, **kw):
     return _gmm.grouped_matmul(buf, w, interpret=_interpret(), **kw)
+
+
+def fused_sample(logits, gumbel, *, temperature: float = 1.0,
+                 top_k: int = 0, top_p: float = 1.0, vocab_size: int = 0):
+    """Fused temperature+top-k+top-p+Gumbel-max sampling over (B, V)
+    logits; gumbel is the caller's per-row Gumbel(0,1) noise.  Returns
+    (token (B,) int32, behaviour logprob (B,) float32)."""
+    return _samp.fused_sample_bv(
+        logits, gumbel, temperature=temperature, top_k=top_k, top_p=top_p,
+        vocab_size=vocab_size, interpret=_interpret())

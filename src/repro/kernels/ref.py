@@ -67,6 +67,38 @@ def grouped_matmul_ref(buf, w):
     ).astype(buf.dtype)
 
 
+def fused_sample_ref(logits, gumbel, *, temperature=1.0, top_k=0,
+                     top_p=1.0, vocab_size=0):
+    """Oracle for the fused sampling kernel: the unfused serving path
+    (temperature -> top-k -> top-p -> Gumbel-max categorical) with the
+    Gumbel noise passed in, plus the behaviour logprob under the
+    unfiltered temperature-1 policy.
+
+    logits/gumbel (B, V) -> (token (B,) int32, logprob (B,) float32)
+    """
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    if 0 < vocab_size < V:
+        logits = jnp.where(jnp.arange(V) < vocab_size, logits, NEG_INF)
+    if temperature <= 0.0:
+        tok = jnp.argmax(logits, axis=-1)
+    else:
+        x = logits / temperature
+        if 0 < top_k < V:
+            vals, _ = jax.lax.top_k(x, top_k)
+            x = jnp.where(x < vals[..., -1:], NEG_INF, x)
+        if top_p < 1.0:
+            srt = jnp.sort(x, axis=-1)[..., ::-1]
+            cum = jnp.cumsum(jax.nn.softmax(srt, axis=-1), axis=-1)
+            cut = jnp.take_along_axis(
+                srt, jnp.sum(cum < top_p, axis=-1, keepdims=True), axis=-1)
+            x = jnp.where(x < cut, NEG_INF, x)
+        tok = jnp.argmax(x + gumbel.astype(jnp.float32), axis=-1)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lp = jnp.take_along_axis(logits, tok[..., None], axis=-1)[..., 0] - lse
+    return tok.astype(jnp.int32), lp.astype(jnp.float32)
+
+
 def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens):
     """Single-token decode attention over a paged KV cache.
 

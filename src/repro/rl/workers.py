@@ -48,6 +48,7 @@ class RolloutWorker(Worker):
                  seed: int = 0, devices: Sequence[int] = (),
                  process_index: int = 0, engine: str = "auto",
                  max_batch: int = 8, page_size: int = 16,
+                 prefix_sharing: bool = True, prefill_chunk: int = 32,
                  action_range: Optional[tuple] = None,
                  act_latency: float = 0.0,
                  act_latency_per_env: float = 0.0):
@@ -67,10 +68,15 @@ class RolloutWorker(Worker):
         assert engine in ("paged", "static"), engine
         self.engine_kind = engine
         if engine == "paged":
+            # prefix sharing makes a GRPO group's common prompt prefill
+            # once: generate() submits all group members to one engine,
+            # the first admission indexes the prompt pages in the radix
+            # cache and every sibling adopts them
             self.engine = PagedEngine(
                 cfg, max_batch=max_batch, page_size=page_size,
                 max_new_tokens=max_new_tokens, temperature=temperature,
-                top_k=top_k, top_p=top_p)
+                top_k=top_k, top_p=top_p, prefix_sharing=prefix_sharing,
+                prefill_chunk=prefill_chunk)
         else:
             self.engine = Engine(cfg, max_new_tokens=max_new_tokens,
                                  temperature=temperature, top_k=top_k,

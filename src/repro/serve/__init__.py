@@ -5,12 +5,16 @@ from repro.serve.engine import (  # noqa: F401
 )
 from repro.serve.paging import (  # noqa: F401
     OutOfPages,
+    PageAccountingError,
     PageAllocator,
     PagedKVCache,
+    PrefixCache,
+    PrefixMatch,
     init_paged_cache,
 )
 from repro.serve.sampling import (  # noqa: F401
     sample_token,
+    sample_tokens_fused,
     top_k_logits,
     top_p_logits,
 )

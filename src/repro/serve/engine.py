@@ -42,15 +42,17 @@ from repro.models.layers import (
     unembed,
 )
 from repro.serve.paging import (
+    TRASH_PAGE,
     OutOfPages,
     PageAllocator,
     PagedKVCache,
+    PrefixCache,
     init_paged_cache,
     pad_block_table,
 )
 from repro.obs import metrics as _metrics
 from repro.obs import trace as _trace
-from repro.serve.sampling import sample_token
+from repro.serve.sampling import sample_token, sample_tokens_fused
 from repro.serve.scheduler import RUNNING, ContinuousScheduler, Request
 
 
@@ -215,6 +217,8 @@ class PagedEngine:
                  max_new_tokens: int = 32, temperature: float = 1.0,
                  top_k: int = 0, top_p: float = 1.0, eos_token: int = 2,
                  pad_token: int = 0, use_kernel: bool = False,
+                 prefix_sharing: bool = True, prefill_chunk: int = 32,
+                 use_sampling_kernel: Optional[bool] = None,
                  dtype=jnp.float32):
         if cfg.kind != DENSE:
             raise NotImplementedError(
@@ -233,6 +237,14 @@ class PagedEngine:
         self.eos = eos_token
         self.pad = pad_token
         self.use_kernel = use_kernel
+        # fused sampling: like use_kernel, the Pallas path only pays off
+        # compiled; default ON on TPU, OFF under CPU interpret mode
+        if use_sampling_kernel is None:
+            use_sampling_kernel = jax.default_backend() == "tpu"
+        self.use_sampling_kernel = use_sampling_kernel
+        # per-step prompt-token budget for chunked prefill (0 = legacy
+        # token-by-token prefill through the decode step)
+        self.prefill_chunk = int(prefill_chunk)
         self.max_blocks = -(-self.max_seq_len // page_size)
         # default pool: every slot can hold a full sequence (+ trash page)
         if num_pages is None:
@@ -242,9 +254,11 @@ class PagedEngine:
         assert num_pages - 1 >= self.max_blocks, (num_pages, self.max_blocks)
         self.allocator = PageAllocator(num_pages=num_pages,
                                        page_size=page_size)
+        self.prefix_cache: Optional[PrefixCache] = (
+            PrefixCache(page_size) if prefix_sharing else None)
         self.scheduler = ContinuousScheduler(
             max_batch=max_batch, allocator=self.allocator,
-            max_seq_len=self.max_seq_len)
+            max_seq_len=self.max_seq_len, prefix_cache=self.prefix_cache)
         self.cache: PagedKVCache = init_paged_cache(
             cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
             cfg.resolved_head_dim, dtype)
@@ -263,6 +277,16 @@ class PagedEngine:
         # per-step .at[].set() updates the cache in place instead of
         # copying the whole pool every token
         self._step_fn = jax.jit(self._step_impl, donate_argnums=(1, 2))
+        self._prefill_fn = jax.jit(self._prefill_impl, donate_argnums=(1, 2))
+        self._cow_fn = jax.jit(self._cow_impl, donate_argnums=(0, 1))
+        if prefix_sharing:
+            # compile the copy-on-write kernel now (trash page onto
+            # itself is a semantic no-op) so the first real COW during a
+            # measured run doesn't eat a compilation
+            self.cache = PagedKVCache(*self._cow_fn(
+                self.cache.k, self.cache.v,
+                jnp.asarray(TRASH_PAGE, jnp.int32),
+                jnp.asarray(TRASH_PAGE, jnp.int32)))
 
     # ------------------------------------------------------------------
     # weights
@@ -321,6 +345,12 @@ class PagedEngine:
             self.params = params
             self.weight_version = version
             self.weight_swaps += 1 + skipped
+        # cached prefixes were computed under the OLD weights: a request
+        # admitted after the swap must not adopt stale KV.  Running
+        # requests keep their pages (in-flight sync semantics); only the
+        # cache's own references are dropped.
+        if self.prefix_cache is not None:
+            self.prefix_cache.flush(self.allocator)
         tr = _trace.active()
         if tr is not None:
             tr.instant("weight-swap", "engine", version=version,
@@ -388,80 +418,303 @@ class PagedEngine:
         keys = jax.vmap(
             lambda s, p: jax.random.fold_in(jax.random.PRNGKey(s), p)
         )(seeds, positions)
-        tok, lp = jax.vmap(functools.partial(
-            sample_token, temperature=self.temperature, top_k=self.top_k,
-            top_p=self.top_p, vocab_size=cfg.vocab_size))(keys, logits)
+        if self.use_sampling_kernel:
+            tok, lp = sample_tokens_fused(
+                keys, logits, temperature=self.temperature,
+                top_k=self.top_k, top_p=self.top_p,
+                vocab_size=cfg.vocab_size)
+        else:
+            tok, lp = jax.vmap(functools.partial(
+                sample_token, temperature=self.temperature,
+                top_k=self.top_k, top_p=self.top_p,
+                vocab_size=cfg.vocab_size))(keys, logits)
         return tok, lp, k_pages, v_pages
+
+    def _prefill_impl(self, params, k_pages, v_pages, tokens, positions,
+                      block_table, n_valid):
+        """Write KV for up to ``prefill_chunk`` prompt positions of ONE
+        request in a single forward.  No logits come back: every chunked
+        position is strictly before the sampling frontier, which always
+        goes through :meth:`_step_impl`.  Shapes fixed by construction:
+        tokens/positions (C,), block_table (max_blocks,), n_valid ()."""
+        cfg = self.cfg
+        C = tokens.shape[0]
+        page = self.page_size
+        S = self.max_blocks * page
+        valid = jnp.arange(C) < n_valid
+        x = embed(params["embed"], tokens[None, :])  # (1, C, d)
+        posb = positions[None, :]
+        # padded rows scatter into the trash page, like inactive slots
+        page_idx = jnp.where(valid, block_table[positions // page],
+                             TRASH_PAGE)
+        offset = positions % page
+        kpos = jnp.arange(S)
+        # causal over the request's own logical context: everything at or
+        # before a row's position is already cached (earlier steps) or is
+        # written by this very chunk's scatter before the gather below
+        mask = jnp.where(kpos[None, :] <= positions[:, None], 0.0,
+                         NEG_INF)[None, None]  # (1, 1, C, S)
+
+        def layer_body(carry, xs):
+            x = carry
+            lp, kl, vl = xs  # kl/vl: (P, page, KV, hd)
+            h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            q, k, v = qkv_project(lp["attn"], cfg, h)  # (1, C, H|KV, hd)
+            q = apply_rope(q, posb, cfg.rope_theta)
+            k = apply_rope(k, posb, cfg.rope_theta)
+            kl = kl.at[page_idx, offset].set(k[0].astype(kl.dtype))
+            vl = vl.at[page_idx, offset].set(v[0].astype(vl.dtype))
+            kc = kl[block_table].reshape(1, S, *kl.shape[2:])
+            vc = vl[block_table].reshape(1, S, *vl.shape[2:])
+            out = sdpa(q, kc, vc, mask)  # (1, C, H, hd)
+            x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
+            x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+            return x, (kl, vl)
+
+        _, (k_pages, v_pages) = jax.lax.scan(
+            layer_body, x, (params["layers"], k_pages, v_pages))
+        return k_pages, v_pages
+
+    @staticmethod
+    def _cow_impl(k_pages, v_pages, src, dst):
+        """Copy page ``src`` into page ``dst`` on every layer — the
+        copy-on-write that lets a request extend a shared partial page
+        privately.  The whole page is copied (not just the adopted rows):
+        rows past the destination's computed watermark are never read
+        before the owner overwrites them, and a row count would otherwise
+        have to be a static arg that recompiles per distinct value."""
+        k_pages = k_pages.at[:, dst].set(k_pages[:, src])
+        v_pages = v_pages.at[:, dst].set(v_pages[:, src])
+        return k_pages, v_pages
 
     # ------------------------------------------------------------------
     # host-side engine loop
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """Admit, advance every active request one token, join/evict.
-        Returns the number of requests advanced."""
+        """Admit, advance every active request, join/evict.  Returns the
+        number of requests advanced (chunk-prefilled or decoded).
+
+        Per step: pending COW copies run first, then each request (rid
+        order) fast-forwards ``num_cached`` through shared pages as far
+        as their computed watermarks allow, requests blocked behind an
+        in-flight writer of their shared prefix sit the step out, the
+        remaining prompt work is chunk-prefilled under the
+        ``prefill_chunk`` token budget, and everyone at the sampling
+        frontier decodes one token in the fixed-shape batch."""
         tr = _trace.active()
+        reg = _metrics.active()
         t_step = time.perf_counter() if tr is not None else 0.0
         self._apply_pending()  # before the check: update_weights() alone
         # is a valid way to deliver the initial weights
         assert self.params is not None, "engine weights not initialized"
         self.scheduler.admit(weight_version=self.weight_version)
+        self._perform_cow_copies()
         self._grow_pages_or_preempt()
         reqs = self.scheduler.active_requests()
         if tr is not None:
             util = (self.allocator.num_allocated
                     / max(self.allocator.num_pages, 1))
             tr.counter("engine/page_util", util)
-            reg = _metrics.active()
             if reg is not None:
                 reg.gauge("engine/page_util").set(util)
+                if self.prefix_cache is not None:
+                    reg.gauge("serve/radix_pages").set(
+                        self.prefix_cache.num_pages)
         if not reqs:
             if tr is not None:
                 tr.add("engine-step", "engine", t_step, time.perf_counter(),
-                       advanced=0, prefill=0, decode=0)
+                       advanced=0, prefill=0, decode=0, chunked=0)
             return 0
-        B = self.max_batch
-        tokens = np.zeros((B,), np.int32)
-        positions = np.zeros((B,), np.int32)
-        tables = np.zeros((B, self.max_blocks), np.int32)  # trash page
-        seeds = np.zeros((B,), np.int32)
-        for r in reqs:
-            pos = r.num_cached
-            if pos < r.prompt_len:
-                tokens[r.slot] = r.prompt[pos]
-            else:
-                tokens[r.slot] = r.generated[pos - r.prompt_len]
-            positions[r.slot] = pos
-            tables[r.slot] = pad_block_table(r.pages, self.max_blocks)
-            seeds[r.slot] = r.seed
-        tok, lp, kc, vc = self._step_fn(
-            self.params, self.cache.k, self.cache.v, jnp.asarray(tokens),
-            jnp.asarray(positions), jnp.asarray(tables), jnp.asarray(seeds))
-        self.cache = PagedKVCache(k=kc, v=vc)
-        tok_np, lp_np = np.asarray(tok), np.asarray(lp)
-        for r in reqs:
-            pos = r.num_cached
-            r.num_cached += 1
-            r.last_weight_version = self.weight_version
-            # sample only at the frontier: during prompt prefill AND during
-            # post-preemption replay of already-generated tokens the step
-            # is teacher-forced and its sampled token is discarded
-            if pos == r.total_len - 1 and pos >= r.prompt_len - 1:
-                t = int(tok_np[r.slot])
-                r.generated.append(t)
-                r.logprobs.append(float(lp_np[r.slot]))
-                if t == self.eos or len(r.generated) >= r.max_new_tokens:
-                    r.hit_eos = t == self.eos
-                    self.scheduler.finish(r)
+        budget = self.prefill_chunk
+        chunked_tokens = 0
+        chunk_only = 0  # advanced by chunk but not yet at the frontier
+        deferred = 0
+        decode_reqs: List[Request] = []
+        waiting: List[Request] = []
+        for r in sorted(reqs, key=lambda q: q.rid):
+            skipped = self._fast_forward(r)
+            if skipped and reg is not None:
+                reg.counter("serve/prefix_hit_tokens").inc(skipped)
+            if self._waiting_on_writer(r):
+                # the shared page under our cursor is still being filled
+                # by its writer; wait instead of duplicating its prefill
+                waiting.append(r)
+                continue
+            if self.prefill_chunk > 0 and r.num_cached < r.total_len - 1:
+                need = r.total_len - 1 - r.num_cached
+                grant = min(need, budget)
+                if grant > 0:
+                    self._prefill_chunk_step(r, grant)
+                    budget -= grant
+                    chunked_tokens += grant
+                    # a chunk may complete up to a watermark another
+                    # sharer extended meanwhile
+                    self._fast_forward(r)
+                if r.num_cached < r.total_len - 1:
+                    deferred += r.total_len - 1 - r.num_cached
+                    chunk_only += 1 if grant > 0 else 0
+                    continue  # still mid-prompt: no frontier this step
+            decode_reqs.append(r)
+        if not decode_reqs and chunked_tokens == 0 and waiting:
+            # safety valve: never let the whole step idle on writers
+            # (cannot happen under the acyclic wait order, but a stalled
+            # step here would be an infinite loop in run())
+            decode_reqs = waiting
+        if decode_reqs:
+            B = self.max_batch
+            tokens = np.zeros((B,), np.int32)
+            positions = np.zeros((B,), np.int32)
+            tables = np.zeros((B, self.max_blocks), np.int32)  # trash page
+            seeds = np.zeros((B,), np.int32)
+            for r in decode_reqs:
+                pos = r.num_cached
+                if pos < r.prompt_len:
+                    tokens[r.slot] = r.prompt[pos]
+                else:
+                    tokens[r.slot] = r.generated[pos - r.prompt_len]
+                positions[r.slot] = pos
+                tables[r.slot] = pad_block_table(r.pages, self.max_blocks)
+                seeds[r.slot] = r.seed
+            tok, lp, kc, vc = self._step_fn(
+                self.params, self.cache.k, self.cache.v,
+                jnp.asarray(tokens), jnp.asarray(positions),
+                jnp.asarray(tables), jnp.asarray(seeds))
+            self.cache = PagedKVCache(k=kc, v=vc)
+            tok_np, lp_np = np.asarray(tok), np.asarray(lp)
+            for r in decode_reqs:
+                pos = r.num_cached
+                r.num_cached += 1
+                r.last_weight_version = self.weight_version
+                page = self.page_size
+                self.allocator.note_computed(r.pages[pos // page],
+                                             pos % page + 1)
+                # sample only at the frontier: during prompt prefill AND
+                # during post-preemption replay of already-generated
+                # tokens the step is teacher-forced and its sampled token
+                # is discarded
+                if pos == r.total_len - 1 and pos >= r.prompt_len - 1:
+                    t = int(tok_np[r.slot])
+                    r.generated.append(t)
+                    r.logprobs.append(float(lp_np[r.slot]))
+                    if t == self.eos or len(r.generated) >= r.max_new_tokens:
+                        r.hit_eos = t == self.eos
+                        # only index KV produced wholly under the current
+                        # weights — spans of a mid-flight swap are stale
+                        self.scheduler.finish(
+                            r, index_in_cache=(
+                                r.weight_version == self.weight_version))
+        if deferred:
+            self.scheduler.stats.chunk_deferred_tokens += deferred
+            if reg is not None:
+                reg.counter("serve/prefill_chunk_deferred").inc(deferred)
         self.decode_steps += 1
         self.scheduler.stats.steps += 1
+        advanced = len(decode_reqs) + chunk_only
         if tr is not None:
             # num_cached already advanced: a slot still inside its prompt
             # was a prefill (teacher-forced) step, the rest decoded
-            prefill = sum(1 for r in reqs if r.num_cached < r.prompt_len)
+            prefill = sum(1 for r in decode_reqs
+                          if r.num_cached < r.prompt_len)
             tr.add("engine-step", "engine", t_step, time.perf_counter(),
-                   advanced=len(reqs), prefill=prefill,
-                   decode=len(reqs) - prefill)
-        return len(reqs)
+                   advanced=advanced, prefill=prefill,
+                   decode=len(decode_reqs) - prefill,
+                   chunked=chunked_tokens)
+        return advanced
+
+    # ------------------------------------------------------------------
+    # prefix sharing + chunked prefill plumbing
+    # ------------------------------------------------------------------
+    def _fast_forward(self, r: Request) -> int:
+        """Advance ``num_cached`` through the shared-prefix region as far
+        as the adopted pages' computed watermarks allow (never past the
+        sampling frontier).  Returns the number of positions skipped —
+        prompt tokens this request will never prefill."""
+        if r.shared_len <= r.num_cached:
+            return 0
+        page = self.page_size
+        ceiling = min(r.shared_len, r.total_len - 1)
+        skipped = 0
+        while r.num_cached < ceiling:
+            pidx = r.num_cached // page
+            avail = pidx * page + self.allocator.computed_rows(
+                r.pages[pidx])
+            if avail <= r.num_cached:
+                break
+            new = min(avail, ceiling)
+            skipped += new - r.num_cached
+            r.num_cached = new
+        if skipped:
+            self.scheduler.stats.prefix_hit_tokens += skipped
+        return skipped
+
+    def _waiting_on_writer(self, r: Request) -> bool:
+        """True when the shared page under the request's cursor is still
+        being prefilled by another running request (the trie writer):
+        the follower waits for watermarks to advance instead of
+        recomputing rows the writer will produce anyway."""
+        if r.num_cached >= min(r.shared_len, r.total_len - 1):
+            return False
+        pidx = r.num_cached // self.page_size
+        if pidx >= len(r.shared_nodes):
+            return False  # COW tail: those rows are ours to compute
+        writer = r.shared_nodes[pidx].writer
+        return writer is not None and writer != r.rid
+
+    def _perform_cow_copies(self) -> None:
+        """Run the device copies the scheduler planned at admission: the
+        computed rows of a shared partial page land in the request's
+        private page, the watermark follows, and the pinned source is
+        released (decref)."""
+        for r in self.scheduler.active_requests():
+            if r.pending_cow is None:
+                continue
+            src, dst, rows = r.pending_cow
+            kc, vc = self._cow_fn(
+                self.cache.k, self.cache.v,
+                jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32))
+            self.cache = PagedKVCache(k=kc, v=vc)
+            self.allocator.note_computed(dst, rows)
+            self.allocator.free([src])  # release the admission pin
+            r.pending_cow = None
+            reg = _metrics.active()
+            if reg is not None:
+                reg.counter("serve/cow_pages").inc()
+
+    def _prefill_chunk_step(self, r: Request, grant: int) -> None:
+        """Cache ``grant`` positions of request ``r`` starting at
+        ``num_cached`` in one jitted forward (prompt tokens, or generated
+        tokens during post-preemption replay) and advance the watermarks
+        so sharers can fast-forward behind us."""
+        start = r.num_cached
+        end = start + grant
+        C = self.prefill_chunk
+        toks = np.zeros((C,), np.int32)
+        poss = np.zeros((C,), np.int32)
+        for i, pos in enumerate(range(start, end)):
+            toks[i] = (r.prompt[pos] if pos < r.prompt_len
+                       else r.generated[pos - r.prompt_len])
+            poss[i] = pos
+        table = np.asarray(pad_block_table(r.pages, self.max_blocks),
+                           np.int32)
+        kc, vc = self._prefill_fn(
+            self.params, self.cache.k, self.cache.v, jnp.asarray(toks),
+            jnp.asarray(poss), jnp.asarray(table),
+            jnp.asarray(grant, jnp.int32))
+        self.cache = PagedKVCache(k=kc, v=vc)
+        r.num_cached = end
+        r.last_weight_version = self.weight_version
+        page = self.page_size
+        for pidx in range(start // page, (end - 1) // page + 1):
+            self.allocator.note_computed(
+                r.pages[pidx], min(end - pidx * page, page))
+
+    def release_prefix_cache(self) -> int:
+        """Drop every cache-held page reference (tests, memory pressure,
+        or an explicit reset between workloads).  Running requests keep
+        theirs.  Returns the number of trie nodes dropped."""
+        if self.prefix_cache is None:
+            return 0
+        return self.prefix_cache.flush(self.allocator)
 
     def _grow_pages_or_preempt(self) -> None:
         """Back every active request's next slot with a page.  When the

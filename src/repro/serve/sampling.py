@@ -75,3 +75,34 @@ def sample_token(
     # behaviour logprob under the unfiltered temp-1 policy (see module doc)
     lp = token_logprobs(logits, tok)
     return tok.astype(jnp.int32), lp
+
+
+def sample_tokens_fused(
+    keys: jax.Array,    # (B, 2) per-row PRNG keys (same keys sample_token
+    logits: jax.Array,  # (B, V)  would receive row-by-row)
+    *,
+    temperature: float = 1.0,
+    top_k: int = 0,
+    top_p: float = 1.0,
+    vocab_size: int = 0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Batched :func:`sample_token` through the fused Pallas kernel.
+
+    ``jax.random.categorical`` IS Gumbel-max (``argmax(logits +
+    gumbel(key))``), so drawing the Gumbel noise here from the same
+    per-row keys and fusing filter+argmax in the kernel reproduces the
+    unfused path draw-for-draw; parity sweeps in test_kernels.py hold
+    the two together.
+    """
+    from repro.kernels import ops as kops
+
+    logits = logits.astype(jnp.float32)
+    B, V = logits.shape
+    if temperature <= 0.0:
+        gumbel = jnp.zeros_like(logits)  # greedy: noise unused
+    else:
+        gumbel = jax.vmap(
+            lambda k: jax.random.gumbel(k, (V,), jnp.float32))(keys)
+    return kops.fused_sample(
+        logits, gumbel, temperature=temperature, top_k=top_k, top_p=top_p,
+        vocab_size=vocab_size)

@@ -8,6 +8,16 @@ the mechanism that removes the long-tail stall of static batching
 (paper Fig. 2): devices never idle behind the slowest response as long
 as the queue is non-empty.
 
+With a :class:`~repro.serve.paging.PrefixCache` attached, admission also
+resolves prefix sharing (SGLang RadixAttention idiom): the new request
+adopts the longest chain of cached full pages (refcount bumped, so a
+shared page outlives any single owner), plans a copy-on-write extension
+of a cached partial page when profitable, and indexes its own prompt
+region so later arrivals — GRPO siblings behind it in the queue, or the
+next turn of a multi-turn episode — share *its* prefill.  When the pool
+runs dry, admission and page growth evict cold trie leaves (LRU) before
+giving up or preempting.
+
 The scheduler is pure host-side bookkeeping — the engine owns the jitted
 compute and asks the scheduler which requests occupy which slots.
 """
@@ -17,9 +27,9 @@ import itertools
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
-from repro.serve.paging import PageAllocator
+from repro.serve.paging import PageAllocator, PrefixCache, PrefixNode
 
 QUEUED = "queued"
 RUNNING = "running"
@@ -44,6 +54,20 @@ class Request:
     generated: List[int] = field(default_factory=list)
     logprobs: List[float] = field(default_factory=list)
     hit_eos: bool = False
+    # -- prefix sharing ----------------------------------------------------
+    # tokens at the front of the prompt whose KV lives in pages adopted
+    # from the prefix cache (full pages + COW rows); the engine
+    # fast-forwards ``num_cached`` through this region as the shared
+    # pages' computed watermarks allow
+    shared_len: int = 0
+    # trie nodes backing the adopted full pages (parallel to the first
+    # len(shared_nodes) entries of ``pages``); used to wait on an active
+    # writer instead of recomputing its rows
+    shared_nodes: List[PrefixNode] = field(default_factory=list)
+    # planned copy-on-write: (src_page, dst_page, rows).  The source page
+    # holds an extra pin (refcount) until the engine performs the device
+    # copy — or until release, if the request dies first.
+    pending_cow: Optional[Tuple[int, int, int]] = None
     # weight version the request was admitted under, and the newest
     # version that produced any of its tokens (in-flight sync may advance
     # it; the staleness correction uses the conservative admitted tag)
@@ -78,16 +102,23 @@ class SchedulerStats:
     peak_active: int = 0
     steps: int = 0
     preempted: int = 0
+    # -- prefix sharing / chunked prefill ----------------------------------
+    prefix_hit_tokens: int = 0       # prompt tokens skipped via shared KV
+    prefix_shared_pages: int = 0     # full pages adopted at admission
+    cow_pages: int = 0               # copy-on-write page extensions
+    chunk_deferred_tokens: int = 0   # prefill tokens pushed past a step
 
 
 class ContinuousScheduler:
     """Admission queue + running set over ``max_batch`` decode slots."""
 
     def __init__(self, *, max_batch: int, allocator: PageAllocator,
-                 max_seq_len: int):
+                 max_seq_len: int,
+                 prefix_cache: Optional[PrefixCache] = None):
         self.max_batch = max_batch
         self.allocator = allocator
         self.max_seq_len = max_seq_len
+        self.prefix_cache = prefix_cache
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}  # slot -> request
         self._free_slots: List[int] = list(range(max_batch - 1, -1, -1))
@@ -114,19 +145,66 @@ class ContinuousScheduler:
         """FIFO-backfill free slots while the page budget allows.
 
         A request is admitted only if pages for its *whole* prompt plus
-        one decode page are free — admission never deadlocks mid-prefill.
-        Returns the newly-admitted requests (already slotted).
+        one decode page are available — admission never deadlocks
+        mid-prefill.  Pages covering a cached prefix are adopted (incref)
+        rather than allocated; the remainder comes from the free list,
+        topped up by LRU trie eviction when the pool runs dry.  Returns
+        the newly-admitted requests (already slotted).
         """
         joined: List[Request] = []
         while self.waiting and self._free_slots:
             req = self.waiting[0]
+            shared_nodes: List[PrefixNode] = []
+            cow: Optional[Tuple[int, int]] = None  # (src_page, rows)
+            if self.prefix_cache is not None:
+                match = self.prefix_cache.lookup(req.prompt)
+                shared_nodes = match.nodes
+                # a partial-page extension is only worth copying when the
+                # source rows are actually computed; an in-flight writer's
+                # unfilled tail would copy garbage
+                if (match.partial is not None and match.partial_rows > 0
+                        and self.allocator.computed_rows(match.partial.page)
+                        >= match.partial_rows):
+                    cow = (match.partial.page, match.partial_rows)
+            shared_pages = [n.page for n in shared_nodes]
+            # pin the adopted pages (and the COW source) before any
+            # eviction below can free them out from under us
+            self.allocator.incref(shared_pages)
+            if cow is not None:
+                self.allocator.incref([cow[0]])
             # total_len, not prompt_len: a preempted request re-enters with
             # generated tokens that must be re-cached (recompute on resume)
             need = self.allocator.pages_needed(req.total_len + 1)
-            if not self.allocator.can_allocate(need):
+            need_new = need - len(shared_pages)
+            if (not self.allocator.can_allocate(need_new)
+                    and self.prefix_cache is not None):
+                self.prefix_cache.evict(
+                    need_new - self.allocator.num_free, self.allocator)
+            if not self.allocator.can_allocate(need_new):
+                # admission stalls: roll back the pins, FIFO head keeps
+                # its turn (free() is a decref — the cache still holds
+                # its own reference, so nothing is physically freed)
+                self.allocator.free(shared_pages)
+                if cow is not None:
+                    self.allocator.free([cow[0]])
                 break
             self.waiting.popleft()
-            req.pages = self.allocator.allocate(need)
+            req.pages = shared_pages + self.allocator.allocate(need_new)
+            req.shared_nodes = shared_nodes
+            req.shared_len = len(shared_pages) * self.allocator.page_size
+            if cow is not None:
+                req.pending_cow = (cow[0], req.pages[len(shared_pages)],
+                                   cow[1])
+                req.shared_len += cow[1]
+                self.stats.cow_pages += 1
+            self.stats.prefix_shared_pages += len(shared_pages)
+            if self.prefix_cache is not None:
+                # index this request's own prompt region (it is the
+                # writer) so queued siblings share its prefill
+                self.prefix_cache.insert(
+                    req.prompt, req.pages, self.allocator,
+                    start=len(shared_pages) * self.allocator.page_size,
+                    writer=req.rid)
             req.slot = self._free_slots.pop()
             req.state = RUNNING
             if req.start_time == 0.0:  # keep the first admission time
@@ -146,17 +224,35 @@ class ContinuousScheduler:
     def ensure_page_for(self, req: Request) -> None:
         """Grow the block table so position ``num_cached`` is backed."""
         if req.num_cached >= len(req.pages) * self.allocator.page_size:
+            if (not self.allocator.can_allocate(1)
+                    and self.prefix_cache is not None):
+                self.prefix_cache.evict(1, self.allocator)
             req.pages.extend(self.allocator.allocate(1))
 
-    def preempt(self, req: Request) -> None:
-        """Kick a running request back to the HEAD of the admission queue,
-        freeing its slot and all its pages (vLLM-style recompute
-        preemption): its generated tokens are kept and its KV cache is
-        rebuilt by teacher-forced replay when it is re-admitted."""
-        assert req.state == RUNNING, req.state
+    def _release_pages(self, req: Request) -> None:
+        """Drop every reference the request holds: its page table, an
+        un-performed COW pin, and its writer role in the trie.  free()
+        decrefs — pages also referenced by the cache or by sharers
+        survive."""
+        if self.prefix_cache is not None:
+            self.prefix_cache.release_writer(req.rid)
+        if req.pending_cow is not None:
+            self.allocator.free([req.pending_cow[0]])
+            req.pending_cow = None
         self.allocator.free(req.pages)
         self.stats.evicted_pages += len(req.pages)
         req.pages = []
+        req.shared_nodes = []
+        req.shared_len = 0
+
+    def preempt(self, req: Request) -> None:
+        """Kick a running request back to the HEAD of the admission queue,
+        freeing its slot and decref'ing all its pages (vLLM-style
+        recompute preemption): its generated tokens are kept and its KV
+        cache is rebuilt — or re-adopted from the prefix cache — when it
+        is re-admitted."""
+        assert req.state == RUNNING, req.state
+        self._release_pages(req)
         del self.running[req.slot]
         self._free_slots.append(req.slot)
         req.slot = -1
@@ -165,15 +261,29 @@ class ContinuousScheduler:
         self.waiting.appendleft(req)
         self.stats.preempted += 1
 
-    def finish(self, req: Request) -> None:
-        """Evict: free the pages and the slot immediately (the join half
-        of join/evict happens on the next :meth:`admit`)."""
+    def finish(self, req: Request, *, index_in_cache: bool = True) -> None:
+        """Evict: decref the pages and free the slot immediately (the
+        join half of join/evict happens on the next :meth:`admit`).
+
+        When ``index_in_cache`` is set and a prefix cache is attached,
+        the full sequence (prompt + generated) is indexed first, so a
+        follow-up turn that re-feeds this conversation re-uses the KV.
+        The engine clears the flag when the request's KV spans a weight
+        swap — stale rows must not be served to new requests.
+        """
         assert req.state == RUNNING, req.state
         req.state = FINISHED
         req.finish_time = time.perf_counter()
-        self.allocator.free(req.pages)
-        self.stats.evicted_pages += len(req.pages)
-        req.pages = []
+        if self.prefix_cache is not None and index_in_cache:
+            toks = req.prompt + req.generated
+            if req.generated:
+                # the final sampled token's KV row is never written (the
+                # decode step that would scatter it never runs), so it
+                # must not be indexed: a follower adopting it would serve
+                # a row of zeros — and it may lie past the block table
+                toks = toks[:-1]
+            self.prefix_cache.insert(toks, req.pages, self.allocator)
+        self._release_pages(req)
         del self.running[req.slot]
         self._free_slots.append(req.slot)
         req.slot = -1

@@ -225,3 +225,101 @@ def test_paged_attention_empty_context_returns_zeros():
     want = np.asarray(ref.paged_attention_ref(q, kp, vp, tables, lens))
     np.testing.assert_allclose(got[0], 0.0, atol=1e-6)
     np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused sampling (temperature -> top-k -> top-p -> Gumbel-max)
+# ---------------------------------------------------------------------------
+def _sampling_inputs(seed, B, V):
+    kl, kk = jax.random.split(jax.random.PRNGKey(seed))
+    logits = 4.0 * jax.random.normal(kl, (B, V), jnp.float32)
+    keys = jax.vmap(lambda i: jax.random.fold_in(kk, i))(jnp.arange(B))
+    gumbel = jax.vmap(
+        lambda k: jax.random.gumbel(k, (V,), jnp.float32))(keys)
+    return logits, gumbel, keys
+
+
+@pytest.mark.parametrize("B,V", [(1, 64), (4, 128), (3, 250)])
+@pytest.mark.parametrize("temperature,top_k,top_p,vocab_size", [
+    (0.0, 0, 1.0, 0),     # greedy
+    (1.0, 0, 1.0, 0),     # plain categorical
+    (0.7, 5, 1.0, 0),     # top-k only
+    (1.0, 0, 0.9, 0),     # nucleus only
+    (0.8, 12, 0.7, 40),   # all filters + padded vocab mask
+    (1.3, 0, 0.95, 40),
+])
+def test_fused_sample_sweep(B, V, temperature, top_k, top_p, vocab_size):
+    """Token draws are bit-exact vs the oracle (same Gumbel noise in,
+    same filters, same argmax tie-breaking); logprobs allclose."""
+    logits, gumbel, _ = _sampling_inputs(B * 7 + V, B, V)
+    tok, lp = ops.fused_sample(
+        logits, gumbel, temperature=temperature, top_k=top_k,
+        top_p=top_p, vocab_size=vocab_size)
+    want_tok, want_lp = ref.fused_sample_ref(
+        logits, gumbel, temperature=temperature, top_k=top_k,
+        top_p=top_p, vocab_size=vocab_size)
+    np.testing.assert_array_equal(np.asarray(tok), np.asarray(want_tok))
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(want_lp),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("temperature,top_k,top_p", [
+    (0.0, 0, 1.0),
+    (1.0, 0, 1.0),
+    (0.7, 8, 1.0),
+    (1.0, 0, 0.85),
+    (0.9, 6, 0.8),
+])
+def test_fused_sample_matches_unfused_serving_path(temperature, top_k,
+                                                   top_p):
+    """Draw-for-draw parity with the engine's unfused sample_token under
+    the same per-request PRNG keys (jax.random.categorical IS Gumbel-max,
+    so feeding the kernel Gumbel noise from the same keys must reproduce
+    every draw)."""
+    import functools
+
+    from repro.serve.sampling import sample_token, sample_tokens_fused
+
+    B, V = 5, 96
+    logits, _, keys = _sampling_inputs(11, B, V)
+    want_tok, want_lp = jax.vmap(functools.partial(
+        sample_token, temperature=temperature, top_k=top_k, top_p=top_p,
+        vocab_size=77))(keys, logits)
+    got_tok, got_lp = sample_tokens_fused(
+        keys, logits, temperature=temperature, top_k=top_k, top_p=top_p,
+        vocab_size=77)
+    np.testing.assert_array_equal(np.asarray(got_tok),
+                                  np.asarray(want_tok))
+    np.testing.assert_allclose(np.asarray(got_lp), np.asarray(want_lp),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_fused_sample_greedy_ties_break_like_argmax():
+    logits = (jnp.zeros((2, 64), jnp.float32)
+              .at[0, 7].set(3.0).at[0, 20].set(3.0)  # tie: first wins
+              .at[1, 0].set(1.0))
+    gumbel = jnp.zeros_like(logits)
+    tok, lp = ops.fused_sample(logits, gumbel, temperature=0.0)
+    assert np.asarray(tok).tolist() == [7, 0]
+    want = np.asarray(jax.nn.log_softmax(logits)[jnp.arange(2), tok])
+    np.testing.assert_allclose(np.asarray(lp), want, atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2 ** 16),
+    temperature=st.sampled_from([0.0, 0.5, 1.0, 1.7]),
+    top_k=st.integers(0, 16),
+    top_p=st.sampled_from([0.6, 0.8, 0.95, 1.0]),
+)
+def test_fused_sample_filter_property(seed, temperature, top_k, top_p):
+    """Any filter combination: the fused draw equals the oracle draw."""
+    B, V = 2, 80
+    logits, gumbel, _ = _sampling_inputs(seed, B, V)
+    got = ops.fused_sample(logits, gumbel, temperature=temperature,
+                           top_k=top_k, top_p=top_p)
+    want = ref.fused_sample_ref(logits, gumbel, temperature=temperature,
+                                top_k=top_k, top_p=top_p)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               atol=2e-5, rtol=2e-5)

@@ -10,7 +10,8 @@ from repro.configs import get_config
 from repro.core.profiler import engine_cost_model, fit_tail_factor
 from repro.models import init_model
 from repro.models.layers import token_logprobs
-from repro.serve import Engine, OutOfPages, PagedEngine, PageAllocator
+from repro.serve import (Engine, OutOfPages, PageAccountingError,
+                         PagedEngine, PageAllocator, PrefixCache)
 from repro.serve.paging import TRASH_PAGE, pad_block_table
 from repro.serve.sampling import sample_token, top_k_logits, top_p_logits
 from repro.serve.scheduler import ContinuousScheduler
@@ -55,12 +56,28 @@ def test_allocator_free_list_reuse_and_exhaustion():
         a.allocate(1)
 
 
-def test_allocator_double_free_asserts():
+def test_allocator_double_free_raises_typed_error():
     a = PageAllocator(num_pages=4, page_size=2)
     pages = a.allocate(1)
     a.free(pages)
-    with pytest.raises(AssertionError):
+    # the page must NOT re-enter the free list twice (two requests would
+    # be handed the same page); the typed error makes the bug loud
+    with pytest.raises(PageAccountingError):
         a.free(pages)
+    assert a.num_free == 3  # freed exactly once
+
+
+def test_allocator_refcount_sharing_lifecycle():
+    a = PageAllocator(num_pages=4, page_size=2)
+    (p,) = a.allocate(1)
+    a.incref([p])           # a sharer adopts the page
+    assert a.refcount(p) == 2
+    a.free([p])             # first owner drops out
+    assert a.refcount(p) == 1 and a.num_free == 2
+    a.free([p])             # last reference: physically freed
+    assert a.refcount(p) == 0 and a.num_free == 3
+    with pytest.raises(PageAccountingError):
+        a.incref([p])       # incref of an unallocated page is a bug
 
 
 def test_pages_needed_is_ceil_div():
@@ -211,7 +228,10 @@ def test_paged_matches_legacy_token_for_token_at_temp0(cfg, params):
                                   np.asarray(got.lengths))
     np.testing.assert_allclose(np.asarray(want.logprobs),
                                np.asarray(got.logprobs), atol=1e-4)
-    # every page returned to the free list once the batch drained
+    # after the drain the only live pages are the prefix cache's; a flush
+    # returns every page to the free list
+    assert paged.allocator.num_allocated == paged.prefix_cache.num_pages
+    paged.release_prefix_cache()
     assert paged.allocator.num_allocated == 0
 
 
@@ -293,6 +313,7 @@ def test_paged_engine_ragged_lengths_and_page_recycling(cfg, params):
     assert len(done) == 8
     for r, b in zip(reqs, budgets):
         assert len(r.generated) == b
+    eng.release_prefix_cache()
     assert eng.allocator.num_allocated == 0
     # static padding would cost 8 requests x (4 + 24) slot-steps in two
     # full batches; continuous batching re-forms the batch every step
@@ -369,6 +390,213 @@ def test_rollout_worker_paged_engine_roundtrip(cfg, params):
 
 
 # ---------------------------------------------------------------------------
+# prefix cache: radix trie over page-aligned token blocks
+# ---------------------------------------------------------------------------
+def test_prefix_cache_insert_lookup_roundtrip():
+    a = PageAllocator(num_pages=16, page_size=4)
+    c = PrefixCache(page_size=4)
+    toks = list(range(10))  # 2 full pages + a 2-token partial leaf
+    pages = a.allocate(3)
+    c.insert(toks, pages, a)
+    assert c.num_pages == 3
+    # the trie holds one reference per indexed page (owner + cache)
+    assert all(a.refcount(p) == 2 for p in pages)
+    m = c.lookup(toks)
+    assert [n.page for n in m.nodes] == pages[:2]
+    assert m.partial is not None and m.partial.page == pages[2]
+    assert m.partial_rows == 2
+    # a prompt diverging after the full pages matches only those
+    m2 = c.lookup(toks[:8] + [99, 98])
+    assert [n.page for n in m2.nodes] == pages[:2]
+    assert m2.partial is None and m2.partial_rows == 0
+
+
+def test_prefix_cache_cow_candidate_from_full_page_head():
+    """A prompt sharing only the leading rows of a cached FULL page gets
+    that page as a copy-on-write donor, not as an adopted page."""
+    a = PageAllocator(num_pages=8, page_size=4)
+    c = PrefixCache(page_size=4)
+    pages = a.allocate(1)
+    c.insert([0, 1, 2, 3], pages, a)
+    m = c.lookup([0, 1, 2, 99, 100])
+    assert m.nodes == [] and m.partial is not None
+    assert m.partial.page == pages[0] and m.partial_rows == 3
+
+
+def test_prefix_cache_evicts_lru_leaves_first():
+    a = PageAllocator(num_pages=16, page_size=2)
+    c = PrefixCache(page_size=2)
+    pa = a.allocate(2)
+    pb = a.allocate(1)
+    c.insert([0, 1, 2, 3], pa, a)
+    c.insert([9, 9], pb, a)
+    a.free(pa + pb)  # owners finished: only the cache's refs remain
+    assert a.num_allocated == 3
+    c.lookup([0, 1, 2, 3])  # touch chain A -> chain B becomes LRU
+    assert c.evict(1, a) == 1
+    assert c.num_pages == 2 and a.refcount(pb[0]) == 0
+    # next eviction takes chain A's leaf; the parent is not a leaf yet
+    assert c.evict(1, a) == 1
+    assert a.refcount(pa[1]) == 0 and a.refcount(pa[0]) == 1
+    # the parent became a leaf; asking for more than exists is bounded
+    assert c.evict(5, a) == 1
+    assert c.num_pages == 0 and a.num_allocated == 0
+
+
+def test_prefix_cache_eviction_refuses_shared_and_writing_pages():
+    a = PageAllocator(num_pages=8, page_size=2)
+    c = PrefixCache(page_size=2)
+    mine = a.allocate(1)
+    c.insert([5, 6], mine, a)  # rc 2: running request + cache
+    assert c.evict(1, a) == 0  # pinned by the running request
+    theirs = a.allocate(1)
+    c.insert([7, 8], theirs, a, writer=42)
+    a.free(mine + theirs)  # both owners drop their refs
+    # the page still being prefilled (writer attached) is not evictable
+    assert c.evict(2, a) == 1
+    assert a.refcount(theirs[0]) == 1 and a.refcount(mine[0]) == 0
+    c.release_writer(42)
+    assert c.evict(2, a) == 1
+    assert c.num_pages == 0 and a.num_allocated == 0
+
+
+def test_prefix_cache_flush_releases_everything():
+    a = PageAllocator(num_pages=8, page_size=2)
+    c = PrefixCache(page_size=2)
+    pgs = a.allocate(3)
+    c.insert([0, 1, 2, 3, 4], pgs, a, writer=7)
+    a.free(pgs)
+    assert a.num_allocated == 3
+    assert c.flush(a) == 3
+    assert c.num_pages == 0 and a.num_allocated == 0
+    m = c.lookup([0, 1, 2, 3])
+    assert not m.nodes and m.partial is None
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing through the engine
+# ---------------------------------------------------------------------------
+def test_grpo_group_allocates_shared_prompt_pages_once(cfg, params):
+    """A GRPO group's N identical prompts must prefill the prompt KV
+    once: followers adopt the leader's pages through the radix cache.
+    Asserted via allocator accounting, not timing."""
+    ds = PromptDataset(1, prompt_len=16, seed=0)
+    prompt = np.asarray(ds.next_batch()["prompt_tokens"])[0]
+    group = np.stack([prompt] * 8)
+
+    def run(sharing):
+        eng = PagedEngine(cfg, max_batch=8, page_size=8, max_new_tokens=4,
+                          temperature=0.0, prefix_sharing=sharing)
+        out = eng.generate(params, group, key=jax.random.PRNGKey(0))
+        return eng, np.asarray(out.tokens)
+
+    shared_eng, shared_toks = run(True)
+    private_eng, private_toks = run(False)
+    np.testing.assert_array_equal(shared_toks, private_toks)
+    # shared: 2 prompt pages allocated once + 1 decode page per request;
+    # private: 3 pages x 8 requests
+    assert shared_eng.allocator.pages_allocated_total == 10
+    assert private_eng.allocator.pages_allocated_total == 24
+    assert shared_eng.scheduler.stats.prefix_hit_tokens > 0
+    assert shared_eng.scheduler.stats.prefix_shared_pages == 14  # 7 x 2
+
+
+def test_prefix_cache_copy_on_write_divergent_tail(cfg, params):
+    """Two prompts sharing a partial page: the second copies the shared
+    rows into its own page (never mutating the cached one) and still
+    generates exactly what a cold engine does."""
+    ds = PromptDataset(1, prompt_len=6, seed=8)
+    base = [int(t) for t in np.asarray(ds.next_batch()["prompt_tokens"])[0]]
+    p2 = base[:5] + [(base[5] + 1) % 32]  # diverges inside page 2
+
+    eng = PagedEngine(cfg, max_batch=1, page_size=4, max_new_tokens=4,
+                      temperature=0.0)
+    eng.set_params(params)
+    eng.submit(base, seed=0)
+    eng.run()
+    r2 = eng.submit(p2, seed=1)
+    eng.run()
+    assert eng.scheduler.stats.cow_pages >= 1
+
+    cold = PagedEngine(cfg, max_batch=1, page_size=4, max_new_tokens=4,
+                       temperature=0.0, prefix_sharing=False)
+    cold.set_params(params)
+    c2 = cold.submit(p2, seed=1)
+    cold.run()
+    assert r2.generated == c2.generated
+    np.testing.assert_allclose(r2.logprobs, c2.logprobs, atol=1e-5)
+
+
+def test_preempt_resume_with_shared_prefix_pages(cfg, params):
+    """Preempting a request that holds shared (ref-counted) pages must
+    decref rather than blind-free: the survivors keep decoding from the
+    shared prefix, the victim replays deterministically on resume, and
+    the pool drains to exactly the cache-held pages."""
+    ds = PromptDataset(1, prompt_len=8, seed=9)
+    prompt = np.asarray(ds.next_batch()["prompt_tokens"])[0]
+    group = np.stack([prompt] * 3)
+
+    def run(num_pages):
+        eng = PagedEngine(cfg, max_batch=3, page_size=4, max_seq_len=32,
+                          max_new_tokens=20, temperature=1.0,
+                          num_pages=num_pages, eos_token=-1)
+        out = eng.generate(params, group, key=jax.random.PRNGKey(11))
+        eng.release_prefix_cache()
+        assert eng.allocator.num_allocated == 0
+        return eng, np.asarray(out.tokens)
+
+    tight_eng, tight = run(num_pages=12)   # 11 usable << 20-page peak
+    roomy_eng, roomy = run(num_pages=None)
+    assert tight_eng.scheduler.stats.preempted > 0
+    assert roomy_eng.scheduler.stats.preempted == 0
+    np.testing.assert_array_equal(tight, roomy)
+
+
+def test_chunked_prefill_parity_and_deferral_accounting(cfg, params):
+    """A tiny per-step prefill budget must spread prompt ingestion over
+    steps — counting the deferred tokens — without changing a single
+    sampled token or logprob."""
+    ds = PromptDataset(3, prompt_len=24, seed=5)
+    prompts = np.asarray(ds.next_batch()["prompt_tokens"])
+
+    def run(chunk):
+        eng = PagedEngine(cfg, max_batch=3, page_size=4, max_new_tokens=5,
+                          temperature=1.0, prefill_chunk=chunk)
+        return eng, eng.generate(params, prompts, key=jax.random.PRNGKey(2))
+
+    small_eng, small = run(8)
+    big_eng, big = run(256)
+    np.testing.assert_array_equal(np.asarray(small.tokens),
+                                  np.asarray(big.tokens))
+    np.testing.assert_allclose(np.asarray(small.logprobs),
+                               np.asarray(big.logprobs), atol=1e-5)
+    assert small_eng.scheduler.stats.chunk_deferred_tokens > 0
+    assert big_eng.scheduler.stats.chunk_deferred_tokens == 0
+
+
+def test_serve_metrics_surface_under_tracing(cfg, params):
+    """The serve-tier counters/gauges only record while tracing is
+    armed, and land in the default registry under serve/ and engine/."""
+    from repro.obs import default_registry, tracing
+
+    ds = PromptDataset(1, prompt_len=16, seed=0)
+    prompt = np.asarray(ds.next_batch()["prompt_tokens"])[0]
+    group = np.stack([prompt] * 4)
+    eng = PagedEngine(cfg, max_batch=4, page_size=8, max_new_tokens=3,
+                      temperature=0.0)
+    default_registry().clear()
+    try:
+        with tracing():
+            eng.generate(params, group, key=jax.random.PRNGKey(0))
+        snap = default_registry().snapshot()
+        assert snap["serve/prefix_hit_tokens"]["value"] > 0
+        assert snap["serve/radix_pages"]["max"] > 0
+        assert snap["engine/page_util"]["max"] > 0
+    finally:
+        default_registry().clear()
+
+
+# ---------------------------------------------------------------------------
 # profiler: measured tail factor
 # ---------------------------------------------------------------------------
 def test_fit_tail_factor_known_values():
@@ -414,6 +642,7 @@ def test_paged_engine_preempts_on_page_exhaustion(cfg, params):
         eng.set_params(params)
         reqs = [eng.submit(prompts[i], seed=i) for i in range(4)]
         eng.run()
+        eng.release_prefix_cache()
         assert eng.allocator.num_allocated == 0
         return eng, [r.generated for r in reqs]
 

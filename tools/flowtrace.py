@@ -110,6 +110,12 @@ def trace_family(family: str, iterations: int, out_prefix: str,
     d["family"] = family
     d["trace_path"] = trace_path
     d["report_path"] = report_path
+    # serve-tier counters (prefix-cache hits, chunked-prefill deferrals,
+    # radix cache size) ride along so the summary tells the rollout
+    # throughput story without opening the trace
+    d["serve_metrics"] = {
+        name: fields for name, fields in sorted(snap.items())
+        if name.split("/")[0] in ("serve", "engine")}
     return d
 
 
