@@ -169,7 +169,8 @@ def continuous_vs_static(*, fast: bool = False, out: str | None = None):
     tok_s_static = useful_tokens / t_static
     tok_s_cont = useful_tokens / t_cont
     speedup = t_static / t_cont
-    cm = engine_cost_model("rollout", paged_eng.pop_request_records())
+    cm = engine_cost_model("rollout", paged_eng.pop_request_records(),
+                           layout=paged_eng.layout.name)
     emit("longtail.static_batching_us_per_req", t_static * 1e6 / n_requests,
          f"tok_s={tok_s_static:.0f}")
     emit("longtail.continuous_batching_us_per_req", t_cont * 1e6 / n_requests,

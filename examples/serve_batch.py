@@ -28,8 +28,16 @@ cache, so the throughput ratio measures exactly what the prefix cache
 buys.  ``--json PATH`` merges the result into an existing
 BENCH_serve.json (the bench-serve-smoke CI gate asserts the ratio).
 
+``--arch`` serves any covered architecture from the config zoo through
+its cache layout — e.g. ``--arch mamba2-370m`` runs the same skewed
+workload through the constant-size state cache (no page growth during
+decode), ``--arch granite-moe-3b-a800m`` through the expert-parallel
+MoE decode path.  With ``--json PATH`` the static-vs-paged comparison
+is merged under the ``arch_serve.<arch>`` key of BENCH_serve.json (the
+arch-serve-smoke CI gate asserts the speedup).
+
 Run:  PYTHONPATH=src python examples/serve_batch.py [--requests 64]
-          [--engine both] [--uniform]
+          [--engine both] [--uniform] [--arch mamba2-370m]
       PYTHONPATH=src python examples/serve_batch.py --shared-prefix
           [--groups 4] [--group-size 8] [--prompt-len 64]
 """
@@ -50,10 +58,11 @@ from repro.train.data import PromptDataset
 def make_setup(args):
     # sized so a decode step is compute-bound on CPU (the regime where
     # the batching policy, not Python dispatch, decides throughput)
-    cfg = get_config("codeqwen1.5-7b").reduced().replace(
-        vocab_size=256, d_model=256, num_heads=4, num_kv_heads=2,
-        head_dim=64, d_ff=1024,
-        max_seq_len=max(128, 8 + args.max_new))
+    kw = dict(vocab_size=256, max_seq_len=max(128, 8 + args.max_new))
+    if args.arch == "codeqwen1.5-7b":
+        kw.update(d_model=256, num_heads=4, num_kv_heads=2,
+                  head_dim=64, d_ff=1024)
+    cfg = get_config(args.arch).reduced().replace(**kw)
     params = init_model(jax.random.PRNGKey(0), cfg)
     data = PromptDataset(args.requests, prompt_len=8, seed=1)
     prompts = np.asarray(data.next_batch()["prompt_tokens"])
@@ -111,8 +120,9 @@ def run_paged(cfg, params, prompts, budgets, args):
     wall = time.time() - t_start
     total_tokens = sum(r.total_len for r in reqs)
     print(f"paged: {args.requests} requests, {eng.decode_steps} engine "
-          f"steps, peak batch {eng.scheduler.stats.peak_active}")
-    return wall, total_tokens
+          f"steps, peak batch {eng.scheduler.stats.peak_active}, "
+          f"layout {eng.layout.name}")
+    return wall, total_tokens, eng.layout.name
 
 
 def report(name, wall, total_tokens, n):
@@ -211,6 +221,9 @@ def main(argv=None):
                     help="generation budget cap (default: 48; 8 under "
                          "--shared-prefix, where prompt prefill should "
                          "dominate)")
+    ap.add_argument("--arch", default="codeqwen1.5-7b",
+                    help="config-zoo architecture to serve (any arch a "
+                         "cache layout covers: dense, MoE, SSM, hybrid)")
     ap.add_argument("--engine", choices=("static", "paged", "both"),
                     default="both")
     ap.add_argument("--uniform", action="store_true",
@@ -223,8 +236,9 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--repeats", type=int, default=2)
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="merge the shared-prefix result into this "
-                         "BENCH_serve.json")
+                    help="merge the result (shared_prefix, or "
+                         "arch_serve.<arch> for the engine comparison) "
+                         "into this BENCH_serve.json")
     args = ap.parse_args(argv)
     if args.max_new is None:
         args.max_new = 8 if args.shared_prefix else 48
@@ -238,18 +252,40 @@ def main(argv=None):
         print(f"  p{q:<3d} = {np.percentile(budgets, q):5.1f} tokens")
     print()
 
-    walls = {}
+    walls, toks, layout = {}, {}, None
     if args.engine in ("static", "both"):
         wall, tok = run_static(cfg, params, prompts, budgets, args)
         report("static", wall, tok, args.requests)
-        walls["static"] = wall
+        walls["static"], toks["static"] = wall, tok
     if args.engine in ("paged", "both"):
-        wall, tok = run_paged(cfg, params, prompts, budgets, args)
+        wall, tok, layout = run_paged(cfg, params, prompts, budgets, args)
         report("paged", wall, tok, args.requests)
-        walls["paged"] = wall
+        walls["paged"], toks["paged"] = wall, tok
     if len(walls) == 2:
-        print(f"continuous-batching speedup: "
-              f"{walls['static'] / walls['paged']:.2f}x")
+        speedup = walls["static"] / walls["paged"]
+        print(f"continuous-batching speedup: {speedup:.2f}x")
+        if args.json:
+            result = {
+                "arch": args.arch, "layout": layout,
+                "workload": {
+                    "requests": args.requests, "slots": args.batch,
+                    "max_new": args.max_new, "uniform": args.uniform,
+                },
+                "static": {"wall_s": walls["static"],
+                           "tok_per_s": toks["static"] / walls["static"]},
+                "paged": {"wall_s": walls["paged"],
+                          "tok_per_s": toks["paged"] / walls["paged"]},
+                "speedup": speedup,
+            }
+            try:
+                with open(args.json) as f:
+                    merged = json.load(f)
+            except (OSError, ValueError):
+                merged = {}
+            merged.setdefault("arch_serve", {})[args.arch] = result
+            with open(args.json, "w") as f:
+                json.dump(merged, f, indent=2)
+            print(f"# merged arch_serve[{args.arch!r}] into {args.json}")
     return 0
 
 

@@ -191,6 +191,53 @@ def gmm_invocation(shape_name: str, *, E: int, C: int, D: int, F: int,
         ])
 
 
+def ssm_update_invocation(shape_name: str, *, B: int, H: int, P: int,
+                          N: int) -> KernelInvocation:
+    """Mirrors ``ssm_state_update`` -> ``ssm_state_update_bh``: grid
+    (B, H), one full (P, N) state tile per program (the state cache's
+    constant-size decode step — no blocking, no divisibility)."""
+    return KernelInvocation(
+        kernel="ssm_state_update", shape_name=shape_name,
+        grid=(B, H),
+        operands=[
+            BlockMap("state", (B, H, P, N), (1, 1, P, N),
+                     lambda b, h: (b, h, 0, 0)),
+            BlockMap("x", (B, H, P), (1, 1, P),
+                     lambda b, h: (b, h, 0)),
+            BlockMap("dt", (B, H), (1, 1), lambda b, h: (b, h)),
+            BlockMap("A", (B, H), (1, 1), lambda b, h: (b, h)),
+            BlockMap("Bm", (B, N), (1, N), lambda b, h: (b, 0)),
+            BlockMap("Cm", (B, N), (1, N), lambda b, h: (b, 0)),
+            BlockMap("D", (B, H), (1, 1), lambda b, h: (b, h)),
+            BlockMap("y", (B, H, P), (1, 1, P),
+                     lambda b, h: (b, h, 0)),
+            BlockMap("new_state", (B, H, P, N), (1, 1, P, N),
+                     lambda b, h: (b, h, 0, 0)),
+        ])
+
+
+def _decode_capacity(num_tokens: int) -> int:
+    """Keep in sync with ``kernels.moe_gmm.decode_capacity``: top-k
+    indices are distinct per token, so one expert receives at most T
+    assignments; pad to a 128 multiple above 128 for MXU tiling."""
+    if num_tokens <= 128:
+        return max(num_tokens, 1)
+    return -(-num_tokens // 128) * 128
+
+
+def moe_decode_invocation(shape_name: str, *, T: int, E: int, d: int,
+                          f: int) -> List[KernelInvocation]:
+    """Mirrors ``moe_decode`` -> ``moe_decode_gmm``: tokens gather into
+    an (E, C, d) buffer with C = decode_capacity(T), then grouped GEMMs
+    — gate/up at (E, C, d) @ (E, d, f) and down at (E, C, f) @ (E, f, d)
+    — each with ``grouped_matmul``'s clamped tile sizes."""
+    up = gmm_invocation(shape_name, E=E, C=_decode_capacity(T), D=d, F=f)
+    down = gmm_invocation(shape_name, E=E, C=_decode_capacity(T), D=f, F=d)
+    for inv in (up, down):
+        inv.kernel = "moe_decode"
+    return [up, down]
+
+
 def sampling_invocation(shape_name: str, *, B: int, V: int
                         ) -> KernelInvocation:
     """Mirrors ``fused_sample`` -> ``fused_sample_bv``: grid (B,), one
@@ -306,6 +353,14 @@ def default_invocations() -> List[KernelInvocation]:
             # the fused sampler runs back-to-back with paged attention
             # on every decode step, same batch extent
             out.append(sampling_invocation(name, B=B, V=vocab))
+            # per-arch decode paths through the state / MoE cache
+            # layouts: constant-size SSD state update (mamba2 dims) and
+            # the expert-parallel exact MoE FFN (granite-moe dims:
+            # 40 experts, d_model 1536, expert d_ff 512, T = B tokens)
+            out.append(ssm_update_invocation(
+                name, B=B, H=ssd_H, P=ssd_P, N=ssd_N))
+            out.extend(moe_decode_invocation(
+                name, T=B, E=40, d=1536, f=512))
         else:
             out.append(flash_invocation(
                 name, B=min(B, 8), H=H, S=S, D=D, KV=KV))

@@ -44,6 +44,11 @@ class CostModel:
     # downstream work overlaps the stall) — so the tail term scales with
     # `frac`, the chunk's fraction of the total batch.
     tail_factor: float = 1.0
+    # serve cache layout the records were measured under ("paged-kv",
+    # "paged-kv-moe", "state", ...): per-token cost curves differ by
+    # layout (KV-gather attention vs constant-size state update), so a
+    # fit is only transferable between workers serving the same layout
+    layout: str = ""
 
     def time(self, batch: float, devices: int, frac: float = 1.0) -> float:
         d = max(min(devices, self.max_useful_devices), self.min_devices)

@@ -38,6 +38,58 @@ def _gmm_kernel(buf_ref, w_ref, o_ref, acc_scr, *, num_d_blocks: int):
         o_ref[0, :, :] = acc_scr[...].astype(o_ref.dtype)
 
 
+def decode_capacity(num_tokens: int) -> int:
+    """Drop-free per-expert buffer size for ``moe_decode_gmm``: top-k
+    expert indices are distinct per token, so one expert receives at most
+    ``num_tokens`` assignments; round up to the MXU tile above 128."""
+    if num_tokens <= 128:
+        return max(num_tokens, 1)
+    return ((num_tokens + 127) // 128) * 128
+
+
+def moe_decode_gmm(
+    x: jax.Array,  # (T, d) tokens at the decode frontier
+    expert_idx: jax.Array,  # (T, k) int32 top-k expert ids
+    gate_vals: jax.Array,  # (T, k) f32 normalized gate weights
+    gate_w: jax.Array,  # (E, d, f)
+    up_w: jax.Array,  # (E, d, f)
+    down_w: jax.Array,  # (E, f, d)
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Expert-parallel decode FFN: token→expert gather into a drop-free
+    per-expert buffer, three grouped GEMMs, weighted scatter-add back.
+
+    Unlike the training path's capacity dispatch, nothing is ever
+    dropped (capacity = T covers the worst case of every token routing
+    to one expert), so the result equals the exact top-k combine — the
+    invariant the serve tier's batch-invariance contract needs.
+    Returns (T, d).
+    """
+    T, d = x.shape
+    E = gate_w.shape[0]
+    k = expert_idx.shape[1]
+    C = decode_capacity(T)
+    flat_e = expert_idx.reshape(T * k)
+    # position of each assignment within its expert's buffer (stable,
+    # token-major — the same slot math as the capacity dispatch, minus
+    # the overflow bucket)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (Tk, E)
+    pos_in_expert = jnp.cumsum(onehot, axis=0) - onehot
+    my_pos = jnp.sum(pos_in_expert * onehot, axis=-1)  # (Tk,)
+    slot = flat_e * C + my_pos
+    token_ids = jnp.repeat(jnp.arange(T), k)  # (Tk,)
+    buf = jnp.zeros((E * C, d), x.dtype).at[slot].set(x[token_ids])
+    buf = buf.reshape(E, C, d)
+    h = jax.nn.silu(
+        grouped_matmul(buf, gate_w, interpret=interpret)
+    ) * grouped_matmul(buf, up_w, interpret=interpret)
+    out = grouped_matmul(h.astype(x.dtype), down_w, interpret=interpret)
+    gathered = out.reshape(E * C, d)[slot]  # (Tk, d)
+    weighted = gathered * gate_vals.reshape(T * k, 1).astype(x.dtype)
+    return jnp.zeros((T, d), x.dtype).at[token_ids].add(weighted)
+
+
 def grouped_matmul(
     buf: jax.Array,  # (E, C, D)
     w: jax.Array,  # (E, D, F)

@@ -17,6 +17,7 @@ from repro.kernels import moe_gmm as _gmm
 from repro.kernels import paged_attention as _pa
 from repro.kernels import sampling as _samp
 from repro.kernels import ssd_scan as _ssd
+from repro.kernels import ssm_update as _ssu
 
 # interpret=True whenever we're not actually on TPU
 INTERPRET: Optional[bool] = None
@@ -69,6 +70,25 @@ def ssd_scan(x, dt, A, Bm, Cm, D, chunk: int):
 
 def grouped_matmul(buf, w, **kw):
     return _gmm.grouped_matmul(buf, w, interpret=_interpret(), **kw)
+
+
+def moe_decode(x, expert_idx, gate_vals, gate_w, up_w, down_w):
+    """Expert-parallel exact top-k decode FFN (token→expert gather +
+    grouped per-expert GEMMs): x (T, d), expert_idx/gate_vals (T, k),
+    gate_w/up_w (E, d, f), down_w (E, f, d) -> (T, d)."""
+    return _gmm.moe_decode_gmm(x, expert_idx, gate_vals, gate_w, up_w,
+                               down_w, interpret=_interpret())
+
+
+def ssm_state_update(state, x, dt, A, Bm, Cm, D):
+    """Single-token SSD state update (models.ssm.mamba2_decode layout):
+    state (B, H, P, N) f32, x (B, H, P), dt (B, H), A (H,), Bm/Cm (B, N),
+    D (H,) -> (y (B, H, P) f32, new_state (B, H, P, N) f32)."""
+    B, H = dt.shape
+    Ab = jnp.broadcast_to(A[None, :], (B, H))
+    Db = jnp.broadcast_to(D[None, :], (B, H))
+    return _ssu.ssm_state_update_bh(state, x, dt, Ab, Bm, Cm, Db,
+                                    interpret=_interpret())
 
 
 def fused_sample(logits, gumbel, *, temperature: float = 1.0,

@@ -67,6 +67,45 @@ def grouped_matmul_ref(buf, w):
     ).astype(buf.dtype)
 
 
+def moe_decode_ref(x, expert_idx, gate_vals, gate_w, up_w, down_w):
+    """Oracle for the grouped MoE decode GEMM: dense all-experts compute
+    plus the exact top-k combine matrix (no capacity, no drops).
+
+    x (T, d); expert_idx/gate_vals (T, k); gate_w/up_w (E, d, f);
+    down_w (E, f, d) -> (T, d)
+    """
+    T = x.shape[0]
+    E = gate_w.shape[0]
+    xf = x.astype(jnp.float32)
+    h = jax.nn.silu(
+        jnp.einsum("td,edf->tef", xf, gate_w.astype(jnp.float32))
+    ) * jnp.einsum("td,edf->tef", xf, up_w.astype(jnp.float32))
+    all_out = jnp.einsum("tef,efd->ted", h, down_w.astype(jnp.float32))
+    combine = jnp.zeros((T, E), jnp.float32)
+    combine = jax.vmap(lambda c, idx, g: c.at[idx].set(g))(
+        combine, expert_idx, gate_vals.astype(jnp.float32))
+    return jnp.einsum("te,ted->td", combine, all_out).astype(x.dtype)
+
+
+def ssm_state_update_ref(state, x, dt, A, Bm, Cm, D):
+    """Oracle for the single-token SSD state update (ops layout:
+    per-head A/D vectors broadcast over batch inside the wrapper).
+
+    state (B, H, P, N); x (B, H, P); dt (B, H); A/D (H,); Bm/Cm (B, N)
+    -> (y (B, H, P) f32, new_state (B, H, P, N) f32)
+    """
+    state = state.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A[None, :])  # (B, H)
+    upd = (dtf[:, :, None, None] * xf[:, :, :, None]) * Bm.astype(
+        jnp.float32)[:, None, None, :]
+    new_state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(jnp.float32))
+    y = y + xf * D[None, :, None]
+    return y, new_state
+
+
 def fused_sample_ref(logits, gumbel, *, temperature=1.0, top_k=0,
                      top_p=1.0, vocab_size=0):
     """Oracle for the fused sampling kernel: the unfused serving path

@@ -1,0 +1,87 @@
+"""Mamba2 single-token SSD state-update Pallas TPU kernel (decode).
+
+The decode-time recurrence of ``models/ssm.mamba2_decode`` for ONE token
+per sequence, fused per (batch, head) tile:
+
+  state' = exp(dt * A) * state + (dt * x) ⊗ B
+  y      = state' · C + D * x
+
+This is the serve tier's per-step hot op for SSM/hybrid cache layouts —
+the state-cache analogue of paged attention: constant-size work per
+request per token, no sequence dimension.
+
+Layouts:
+  state: (B, H, P, N)  block (1, 1, P, N)   f32 running SSD state
+  x:     (B, H, P)     block (1, 1, P)      post-conv head inputs
+  dt:    (B, H)        block (1, 1)         post-softplus step size
+  A:     (B, H)        block (1, 1)         negative decay rate
+  Bm:    (B, N)        block (1, N)         input projection (per batch)
+  Cm:    (B, N)        block (1, N)         readout projection
+  D:     (B, H)        block (1, 1)         skip gain
+  y:     (B, H, P)     block (1, 1, P)
+  state':(B, H, P, N)  block (1, 1, P, N)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+
+def _ssm_update_kernel(state_ref, x_ref, dt_ref, a_ref, b_ref, c_ref,
+                       d_ref, y_ref, new_state_ref):
+    state = state_ref[0, 0].astype(jnp.float32)  # (P, N)
+    x = x_ref[0, 0].astype(jnp.float32)  # (P,)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # scalar
+    A = a_ref[0, 0].astype(jnp.float32)  # scalar
+    Bm = b_ref[0].astype(jnp.float32)  # (N,)
+    Cm = c_ref[0].astype(jnp.float32)  # (N,)
+    Dh = d_ref[0, 0].astype(jnp.float32)  # scalar
+
+    decay = jnp.exp(dt * A)
+    new_state = state * decay + (dt * x)[:, None] * Bm[None, :]  # (P, N)
+    y = jnp.dot(new_state, Cm, preferred_element_type=jnp.float32)  # (P,)
+    y_ref[0, 0, :] = (y + Dh * x).astype(y_ref.dtype)
+    new_state_ref[0, 0, :, :] = new_state.astype(new_state_ref.dtype)
+
+
+def ssm_state_update_bh(
+    state: jax.Array,  # (B, H, P, N) f32
+    x: jax.Array,  # (B, H, P)
+    dt: jax.Array,  # (B, H)
+    A: jax.Array,  # (B, H)
+    Bm: jax.Array,  # (B, N)
+    Cm: jax.Array,  # (B, N)
+    D: jax.Array,  # (B, H)
+    *,
+    interpret: bool = True,
+):
+    """Returns (y (B, H, P) f32, new_state (B, H, P, N) f32)."""
+    B, H, P, N = state.shape
+    return pl.pallas_call(
+        _ssm_update_kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, P, N), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, P), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, h)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, h)),
+            pl.BlockSpec((1, N), lambda b, h: (b, 0)),
+            pl.BlockSpec((1, N), lambda b, h: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, h)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, P), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(state, x, dt, A, Bm, Cm, D)

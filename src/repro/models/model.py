@@ -411,11 +411,16 @@ def decode_step(
     extra: Extra = None,
     *,
     unroll: int = 1,
+    use_kernel: bool = False,
 ) -> Tuple[jax.Array, DecodeState]:
     """unroll>1 unrolls the layer scan — XLA can then update each layer's
     KV-cache slice in place instead of copying the cache through the
     loop's double-buffered carry (sweeps GiBs off decode temp memory at
-    production cache sizes; see EXPERIMENTS.md §Perf)."""
+    production cache sizes; see EXPERIMENTS.md §Perf).
+
+    use_kernel routes the per-kind hot inner op through its Pallas
+    implementation (MoE: grouped per-expert decode GEMM; SSM/hybrid: SSD
+    state-update kernel); attention decode stays in XLA here."""
     x = embed(params["embed"], token)  # (B, 1, d)
     w = cfg.sliding_window
 
@@ -436,8 +441,11 @@ def decode_step(
                 lp["attn"], cfg, rmsnorm(lp["ln1"], x, cfg.norm_eps), cache, pos,
                 window=w)
             x = x + h
-            y, _ = moe_mod.moe_block(lp["moe"], cfg,
-                                     rmsnorm(lp["ln2"], x, cfg.norm_eps))
+            # exact top-k combine, NOT capacity dispatch: decode outputs
+            # must not depend on batch composition (capacity drops do)
+            y = moe_mod.moe_decode_exact(
+                lp["moe"], cfg, rmsnorm(lp["ln2"], x, cfg.norm_eps),
+                use_kernel=use_kernel)
             return x + y, cache
         x, kv = jax.lax.scan(body, x, (params["layers"], state.kv),
                              unroll=unroll)
@@ -447,7 +455,8 @@ def decode_step(
         def body(carry, xs):
             lp, st = xs
             y, st = ssm_mod.mamba2_decode(
-                lp["mixer"], cfg, rmsnorm(lp["ln1"], carry, cfg.norm_eps), st)
+                lp["mixer"], cfg, rmsnorm(lp["ln1"], carry, cfg.norm_eps), st,
+                use_kernel=use_kernel)
             return carry + y, st
         x, states = jax.lax.scan(body, x, (params["layers"], state.ssm))
         state = state._replace(ssm=states)
@@ -461,7 +470,8 @@ def decode_step(
             def inner(c, ys):
                 lp, st = ys
                 y, st = ssm_mod.mamba2_decode(
-                    lp["mixer"], cfg, rmsnorm(lp["ln1"], c, cfg.norm_eps), st)
+                    lp["mixer"], cfg, rmsnorm(lp["ln1"], c, cfg.norm_eps), st,
+                    use_kernel=use_kernel)
                 return c + y, st
             c, sts = jax.lax.scan(inner, carry, (gp, sts))
             c, kvc = _attn_decode_layer(shared, cfg, c, kvc, pos, wh)

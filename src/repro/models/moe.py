@@ -123,6 +123,48 @@ def moe_block(
     return y.reshape(B, S, d), aux
 
 
+def moe_decode_exact(
+    p: Params, cfg: ModelConfig, x: jax.Array, *, use_kernel: bool = False
+) -> jax.Array:
+    """Exact top-k expert combine for the serving/decode path (no aux).
+
+    Capacity-based dispatch (:func:`moe_block`) drops tokens as a
+    function of *who else is in the batch* — fine for training, fatal
+    for serving, where sampling must be invariant to how the scheduler
+    composed the decode batch and bit-identical to the static engine at
+    temperature 0.  This path computes the exact per-token top-k
+    combine: gating math identical to :func:`moe_block`, combine
+    identical to :func:`moe_block_dense_ref`.  ``use_kernel`` routes the
+    expert FFNs through the grouped per-expert decode GEMM
+    (``kernels.ops.moe_decode``, token→expert gather layout) instead of
+    the dense all-experts einsum.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)
+    gate_vals = gate_vals / jnp.clip(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        y = kops.moe_decode(xf, expert_idx, gate_vals, p["gate"], p["up"],
+                            p["down"]).astype(x.dtype)
+    else:
+        h = jax.nn.silu(jnp.einsum("td,edf->tef", xf, p["gate"])) * jnp.einsum(
+            "td,edf->tef", xf, p["up"]
+        )
+        all_out = jnp.einsum("tef,efd->ted", h, p["down"])  # (T, E, d)
+        combine = jnp.zeros(probs.shape, jnp.float32)
+        combine = jax.vmap(lambda c, idx, g: c.at[idx].set(g))(
+            combine, expert_idx, gate_vals)
+        y = jnp.einsum("te,ted->td", combine.astype(x.dtype), all_out)
+    if "shared" in p:
+        y = y + mlp(p["shared"], xf)
+    return y.reshape(B, S, d)
+
+
 def moe_block_dense_ref(p: Params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Oracle: dense all-experts compute, exact top-k combine (no capacity drops).
 

@@ -195,9 +195,13 @@ def mamba2_block(
 # Decode step
 # ---------------------------------------------------------------------------
 def mamba2_decode(
-    p: Params, cfg: ModelConfig, x: jax.Array, state: SSMState
+    p: Params, cfg: ModelConfig, x: jax.Array, state: SSMState, *,
+    use_kernel: bool = False
 ) -> Tuple[jax.Array, SSMState]:
-    """x: (B, 1, d_model); O(1) state update."""
+    """x: (B, 1, d_model); O(1) state update.  ``use_kernel`` routes the
+    SSD state update (decay + rank-1 bump + readout) through the Pallas
+    kernel ``kernels.ops.ssm_state_update``; the conv window and
+    projections stay in XLA either way."""
     s = cfg.ssm
     B_ = x.shape[0]
     di, n, nh = cfg.d_inner, s.state_size, cfg.num_ssm_heads
@@ -217,13 +221,19 @@ def mamba2_decode(
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
     A = -jnp.exp(p["A_log"])
     xh = xs.reshape(B_, nh, s.head_dim).astype(jnp.float32)
-    decay = jnp.exp(dt * A)  # (B, nh)
-    upd = (dt[:, :, None, None] * xh[:, :, :, None]) * Bm.astype(jnp.float32)[
-        :, None, None, :
-    ]
-    new_ssm = state.ssm * decay[:, :, None, None] + upd
-    y = jnp.einsum("bhpn,bn->bhp", new_ssm, Cm.astype(jnp.float32))
-    y = y + xh * p["D"][None, :, None]
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        y, new_ssm = kops.ssm_state_update(
+            state.ssm, xh, dt, A, Bm.astype(jnp.float32),
+            Cm.astype(jnp.float32), p["D"])
+    else:
+        decay = jnp.exp(dt * A)  # (B, nh)
+        upd = (dt[:, :, None, None] * xh[:, :, :, None]) * Bm.astype(
+            jnp.float32)[:, None, None, :]
+        new_ssm = state.ssm * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", new_ssm, Cm.astype(jnp.float32))
+        y = y + xh * p["D"][None, :, None]
     y = y.reshape(B_, di).astype(x.dtype)
     y = y * jax.nn.silu(z)
     y = rmsnorm(p["norm"], y, cfg.norm_eps)

@@ -15,9 +15,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import DENSE, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.core.worker import Worker
 from repro.models import init_model
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+from repro.serve import layouts as serve_layouts
 from repro.rl.advantage import broadcast_to_tokens, grpo_advantages
 from repro.rl.env import EnvConfig, VecReachEnv
 from repro.rl.reward import math_reward
@@ -33,13 +36,16 @@ from repro.train.trainer import (
 class RolloutWorker(Worker):
     """Generation engine (the paper's SGLang/vLLM role).
 
-    ``engine="paged"`` (the default for dense stacks) generates through
-    the continuous-batching :class:`~repro.serve.engine.PagedEngine`:
-    requests join/leave the decode batch per step, KV lives in paged
-    blocks, and trainer weight updates apply in flight with per-request
+    ``engine="paged"`` (the default for every arch a cache layout
+    covers: dense, MoE, SSM, hybrid) generates through the
+    continuous-batching :class:`~repro.serve.engine.PagedEngine`:
+    requests join/leave the decode batch per step, the cache lives in
+    the arch's layout (paged KV blocks or constant-size recurrent
+    state), and trainer weight updates apply in flight with per-request
     version tags.  ``engine="static"`` keeps the legacy fixed-shape
-    ``lax.scan`` engine (and is the fallback for non-dense or windowed
-    architectures the paged cache does not cover yet).
+    ``lax.scan`` engine; uncovered archs (encoder-decoder, VLM, windowed
+    attention) fall back to it with a warning and an
+    ``rollout/engine_fallback`` metric.
     """
 
     def __init__(self, name: str, *, cfg: ModelConfig,
@@ -63,8 +69,24 @@ class RolloutWorker(Worker):
         self.act_latency = act_latency
         self.act_latency_per_env = act_latency_per_env
         if engine == "auto":
-            engine = ("paged" if cfg.kind == DENSE
-                      and not cfg.sliding_window else "static")
+            if serve_layouts.covers(cfg):
+                engine = "paged"
+            else:
+                engine = "static"
+                # loud fallback: workloads missing the fast path must
+                # show up in logs and flowtrace summaries, not vanish
+                warnings.warn(
+                    f"RolloutWorker {name!r}: no paged cache layout "
+                    f"covers arch {cfg.name!r} (kind={cfg.kind}, "
+                    f"sliding_window={cfg.sliding_window}); falling "
+                    f"back to the static engine", stacklevel=2)
+                tr = _trace.active()
+                if tr is not None:
+                    tr.instant("engine-fallback", "rollout",
+                               worker=name, arch=cfg.name, kind=cfg.kind)
+                    reg = _metrics.active()
+                    if reg is not None:
+                        reg.counter("rollout/engine_fallback").inc()
         assert engine in ("paged", "static"), engine
         self.engine_kind = engine
         if engine == "paged":

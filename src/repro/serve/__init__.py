@@ -3,6 +3,15 @@ from repro.serve.engine import (  # noqa: F401
     GenerationResult,
     PagedEngine,
 )
+from repro.serve.layouts import (  # noqa: F401
+    CacheLayout,
+    LayoutError,
+    MoEPagedKVLayout,
+    PagedKVLayout,
+    StateCacheLayout,
+    covers,
+    layout_class,
+)
 from repro.serve.paging import (  # noqa: F401
     OutOfPages,
     PageAccountingError,
@@ -20,5 +29,7 @@ from repro.serve.sampling import (  # noqa: F401
 )
 from repro.serve.scheduler import (  # noqa: F401
     ContinuousScheduler,
+    KVPageCost,
+    NullPageCost,
     Request,
 )

@@ -21,7 +21,6 @@ mode is chosen (one-forward-pass trick, §5.3).
 """
 from __future__ import annotations
 
-import functools
 import threading
 import time
 from collections import deque
@@ -31,28 +30,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import DENSE, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.models import model as M
-from repro.models.attention import NEG_INF, qkv_project, sdpa
-from repro.models.layers import (
-    apply_rope,
-    embed,
-    mlp,
-    rmsnorm,
-    unembed,
-)
+from repro.models.attention import NEG_INF
+from repro.serve import layouts as layouts_mod
 from repro.serve.paging import (
-    TRASH_PAGE,
     OutOfPages,
     PageAllocator,
-    PagedKVCache,
     PrefixCache,
-    init_paged_cache,
     pad_block_table,
 )
 from repro.obs import metrics as _metrics
 from repro.obs import trace as _trace
-from repro.serve.sampling import sample_token, sample_tokens_fused
+from repro.serve.sampling import sample_token
 from repro.serve.scheduler import RUNNING, ContinuousScheduler, Request
 
 
@@ -171,22 +161,8 @@ class Engine:
 
 
 # ===========================================================================
-# Continuous-batching engine over a paged KV cache
+# Continuous-batching engine over per-architecture cache layouts
 # ===========================================================================
-def _paged_sdpa(q, k_pages, v_pages, block_tables, context_lens):
-    """Pure-JAX paged attention (gather through the block table + sdpa);
-    the XLA analogue of kernels/paged_attention.py, exact same math."""
-    B = q.shape[0]
-    _, page, KV, hd = k_pages.shape
-    nb = block_tables.shape[1]
-    k = k_pages[block_tables].reshape(B, nb * page, KV, hd)
-    v = v_pages[block_tables].reshape(B, nb * page, KV, hd)
-    pos = jnp.arange(nb * page)
-    mask = jnp.where(pos[None, :] < context_lens[:, None], 0.0,
-                     NEG_INF)[:, None, None, :]  # (B, 1, 1, S)
-    return sdpa(q, k, v, mask)  # (B, 1, H, hd)
-
-
 class PagedEngine:
     """Continuous-batching rollout engine with a paged KV cache.
 
@@ -220,12 +196,12 @@ class PagedEngine:
                  prefix_sharing: bool = True, prefill_chunk: int = 32,
                  use_sampling_kernel: Optional[bool] = None,
                  dtype=jnp.float32):
-        if cfg.kind != DENSE:
+        layout_cls = layouts_mod.layout_class(cfg)
+        if layout_cls is None:
             raise NotImplementedError(
-                f"PagedEngine supports dense decoder stacks, got {cfg.kind}")
-        if cfg.sliding_window:
-            raise NotImplementedError(
-                "PagedEngine does not window the paged cache yet")
+                "PagedEngine does not window the paged cache yet"
+                if cfg.sliding_window else
+                f"PagedEngine has no cache layout for kind={cfg.kind}")
         self.cfg = cfg
         self.max_batch = max_batch
         self.page_size = page_size
@@ -244,24 +220,44 @@ class PagedEngine:
         self.use_sampling_kernel = use_sampling_kernel
         # per-step prompt-token budget for chunked prefill (0 = legacy
         # token-by-token prefill through the decode step)
-        self.prefill_chunk = int(prefill_chunk)
-        self.max_blocks = -(-self.max_seq_len // page_size)
-        # default pool: every slot can hold a full sequence (+ trash page)
-        if num_pages is None:
-            num_pages = max_batch * self.max_blocks + 1
-        # the pool must at least hold ONE full sequence, or the oldest
-        # request could never finish even with everyone else preempted
-        assert num_pages - 1 >= self.max_blocks, (num_pages, self.max_blocks)
+        self.prefill_chunk = (int(prefill_chunk)
+                              if layout_cls.supports_chunked_prefill else 0)
+        if layout_cls.uses_pages:
+            self.max_blocks = -(-self.max_seq_len // page_size)
+            # default pool: every slot holds a full sequence (+ trash page)
+            if num_pages is None:
+                num_pages = max_batch * self.max_blocks + 1
+            # the pool must at least hold ONE full sequence, or the oldest
+            # request could never finish even with everyone else preempted
+            assert num_pages - 1 >= self.max_blocks, (num_pages,
+                                                      self.max_blocks)
+        else:
+            # constant-size layouts keep the allocator as an inert stub
+            # (page_size still parameterizes host bookkeeping); requests
+            # cost zero pages, so the pool size is irrelevant
+            self.max_blocks = 1
+            if num_pages is None:
+                num_pages = 2
         self.allocator = PageAllocator(num_pages=num_pages,
                                        page_size=page_size)
+        # the radix trie (full-page adoption + partial-page COW) only
+        # attaches to layouts that can honour it; state layouts do their
+        # own exact-full-prompt snapshot reuse instead
         self.prefix_cache: Optional[PrefixCache] = (
-            PrefixCache(page_size) if prefix_sharing else None)
+            PrefixCache(page_size)
+            if prefix_sharing and layout_cls.supports_partial_cow else None)
+        self.layout = layout_cls(
+            cfg, max_batch=max_batch, page_size=page_size,
+            num_pages=num_pages, max_blocks=self.max_blocks,
+            max_seq_len=self.max_seq_len, temperature=temperature,
+            top_k=top_k, top_p=top_p, use_kernel=use_kernel,
+            use_sampling_kernel=self.use_sampling_kernel, dtype=dtype,
+            prefix_cache=self.prefix_cache, prefix_sharing=prefix_sharing)
         self.scheduler = ContinuousScheduler(
             max_batch=max_batch, allocator=self.allocator,
-            max_seq_len=self.max_seq_len, prefix_cache=self.prefix_cache)
-        self.cache: PagedKVCache = init_paged_cache(
-            cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
-            cfg.resolved_head_dim, dtype)
+            max_seq_len=self.max_seq_len, prefix_cache=self.prefix_cache,
+            cost_model=self.layout.cost_model(),
+            preempt_keeps_progress=self.layout.preempt_keeps_progress)
         # -- weights + in-flight sync --------------------------------------
         self.params: Any = None
         self.weight_version: int = 0
@@ -273,20 +269,13 @@ class PagedEngine:
         # consumer the log must not grow for the life of the worker
         self.finished_log: deque = deque(maxlen=4096)
         self.decode_steps = 0
-        # donate the page pools: XLA aliases input to output so the
-        # per-step .at[].set() updates the cache in place instead of
-        # copying the whole pool every token
-        self._step_fn = jax.jit(self._step_impl, donate_argnums=(1, 2))
-        self._prefill_fn = jax.jit(self._prefill_impl, donate_argnums=(1, 2))
-        self._cow_fn = jax.jit(self._cow_impl, donate_argnums=(0, 1))
-        if prefix_sharing:
-            # compile the copy-on-write kernel now (trash page onto
-            # itself is a semantic no-op) so the first real COW during a
-            # measured run doesn't eat a compilation
-            self.cache = PagedKVCache(*self._cow_fn(
-                self.cache.k, self.cache.v,
-                jnp.asarray(TRASH_PAGE, jnp.int32),
-                jnp.asarray(TRASH_PAGE, jnp.int32)))
+
+    @property
+    def cache(self):
+        """The layout's device cache (a :class:`PagedKVCache` for KV
+        layouts, a stacked :class:`repro.models.model.DecodeState` for
+        state layouts)."""
+        return self.layout.cache
 
     # ------------------------------------------------------------------
     # weights
@@ -324,9 +313,7 @@ class PagedEngine:
                            if isinstance(x, jax.Array) else x), tree)
 
         with self._sync_lock:
-            self.cache = PagedKVCache(
-                k=jax.device_put(self.cache.k, sharding),
-                v=jax.device_put(self.cache.v, sharding))
+            self.layout.rebind(sharding)
             if self.params is not None:
                 self.params = put(self.params)
             self._pending = deque(
@@ -351,6 +338,7 @@ class PagedEngine:
         # cache's own references are dropped.
         if self.prefix_cache is not None:
             self.prefix_cache.flush(self.allocator)
+        self.layout.on_weight_swap()
         tr = _trace.active()
         if tr is not None:
             tr.instant("weight-swap", "engine", version=version,
@@ -372,122 +360,6 @@ class PagedEngine:
             seed=seed, weight_version=self.weight_version)
 
     # ------------------------------------------------------------------
-    # the jitted fixed-shape step
-    # ------------------------------------------------------------------
-    def _step_impl(self, params, k_pages, v_pages, tokens, positions,
-                   block_tables, seeds):
-        """One token for every slot.  All shapes fixed by construction:
-        tokens/positions/seeds (max_batch,), block_tables
-        (max_batch, max_blocks), cache (L, P, page, KV, hd)."""
-        cfg = self.cfg
-        x = embed(params["embed"], tokens[:, None])  # (B, 1, d)
-        posb = positions[:, None]
-        page = self.page_size
-        page_idx = jnp.take_along_axis(
-            block_tables, (positions // page)[:, None], axis=1)[:, 0]
-        offset = positions % page
-        ctx = positions + 1  # valid tokens after this step's write
-
-        def layer_body(carry, xs):
-            x = carry
-            lp, kl, vl = xs  # kl/vl: (P, page, KV, hd)
-            h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
-            q, k, v = qkv_project(lp["attn"], cfg, h)  # (B, 1, H|KV, hd)
-            q = apply_rope(q, posb, cfg.rope_theta)
-            k = apply_rope(k, posb, cfg.rope_theta)
-            # scatter this step's K/V into each request's current page
-            # (inactive slots target the trash page)
-            kl = kl.at[page_idx, offset].set(k[:, 0].astype(kl.dtype))
-            vl = vl.at[page_idx, offset].set(v[:, 0].astype(vl.dtype))
-            if self.use_kernel:
-                from repro.kernels import ops as kops
-
-                out = kops.paged_attention(
-                    q[:, 0], kl, vl, block_tables, ctx)[:, None]
-            else:
-                out = _paged_sdpa(q, kl, vl, block_tables, ctx)
-            x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
-            x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
-            return x, (kl, vl)
-
-        x, (k_pages, v_pages) = jax.lax.scan(
-            layer_body, x, (params["layers"], k_pages, v_pages))
-        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
-        logits = unembed(params["embed"], x)[:, 0]  # (B, V)
-
-        keys = jax.vmap(
-            lambda s, p: jax.random.fold_in(jax.random.PRNGKey(s), p)
-        )(seeds, positions)
-        if self.use_sampling_kernel:
-            tok, lp = sample_tokens_fused(
-                keys, logits, temperature=self.temperature,
-                top_k=self.top_k, top_p=self.top_p,
-                vocab_size=cfg.vocab_size)
-        else:
-            tok, lp = jax.vmap(functools.partial(
-                sample_token, temperature=self.temperature,
-                top_k=self.top_k, top_p=self.top_p,
-                vocab_size=cfg.vocab_size))(keys, logits)
-        return tok, lp, k_pages, v_pages
-
-    def _prefill_impl(self, params, k_pages, v_pages, tokens, positions,
-                      block_table, n_valid):
-        """Write KV for up to ``prefill_chunk`` prompt positions of ONE
-        request in a single forward.  No logits come back: every chunked
-        position is strictly before the sampling frontier, which always
-        goes through :meth:`_step_impl`.  Shapes fixed by construction:
-        tokens/positions (C,), block_table (max_blocks,), n_valid ()."""
-        cfg = self.cfg
-        C = tokens.shape[0]
-        page = self.page_size
-        S = self.max_blocks * page
-        valid = jnp.arange(C) < n_valid
-        x = embed(params["embed"], tokens[None, :])  # (1, C, d)
-        posb = positions[None, :]
-        # padded rows scatter into the trash page, like inactive slots
-        page_idx = jnp.where(valid, block_table[positions // page],
-                             TRASH_PAGE)
-        offset = positions % page
-        kpos = jnp.arange(S)
-        # causal over the request's own logical context: everything at or
-        # before a row's position is already cached (earlier steps) or is
-        # written by this very chunk's scatter before the gather below
-        mask = jnp.where(kpos[None, :] <= positions[:, None], 0.0,
-                         NEG_INF)[None, None]  # (1, 1, C, S)
-
-        def layer_body(carry, xs):
-            x = carry
-            lp, kl, vl = xs  # kl/vl: (P, page, KV, hd)
-            h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
-            q, k, v = qkv_project(lp["attn"], cfg, h)  # (1, C, H|KV, hd)
-            q = apply_rope(q, posb, cfg.rope_theta)
-            k = apply_rope(k, posb, cfg.rope_theta)
-            kl = kl.at[page_idx, offset].set(k[0].astype(kl.dtype))
-            vl = vl.at[page_idx, offset].set(v[0].astype(vl.dtype))
-            kc = kl[block_table].reshape(1, S, *kl.shape[2:])
-            vc = vl[block_table].reshape(1, S, *vl.shape[2:])
-            out = sdpa(q, kc, vc, mask)  # (1, C, H, hd)
-            x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
-            x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
-            return x, (kl, vl)
-
-        _, (k_pages, v_pages) = jax.lax.scan(
-            layer_body, x, (params["layers"], k_pages, v_pages))
-        return k_pages, v_pages
-
-    @staticmethod
-    def _cow_impl(k_pages, v_pages, src, dst):
-        """Copy page ``src`` into page ``dst`` on every layer — the
-        copy-on-write that lets a request extend a shared partial page
-        privately.  The whole page is copied (not just the adopted rows):
-        rows past the destination's computed watermark are never read
-        before the owner overwrites them, and a row count would otherwise
-        have to be a static arg that recompiles per distinct value."""
-        k_pages = k_pages.at[:, dst].set(k_pages[:, src])
-        v_pages = v_pages.at[:, dst].set(v_pages[:, src])
-        return k_pages, v_pages
-
-    # ------------------------------------------------------------------
     # host-side engine loop
     # ------------------------------------------------------------------
     def step(self) -> int:
@@ -507,7 +379,15 @@ class PagedEngine:
         self._apply_pending()  # before the check: update_weights() alone
         # is a valid way to deliver the initial weights
         assert self.params is not None, "engine weights not initialized"
-        self.scheduler.admit(weight_version=self.weight_version)
+        joined = self.scheduler.admit(weight_version=self.weight_version)
+        for q in joined:
+            # layout-private admission work: slot reset / snapshot
+            # restore / exact-prefix-match reuse (state layouts)
+            skipped = self.layout.on_admit(q)
+            if skipped:
+                self.scheduler.stats.prefix_hit_tokens += skipped
+                if reg is not None:
+                    reg.counter("serve/prefix_hit_tokens").inc(skipped)
         self._perform_cow_copies()
         self._grow_pages_or_preempt()
         reqs = self.scheduler.active_requests()
@@ -566,6 +446,7 @@ class PagedEngine:
             positions = np.zeros((B,), np.int32)
             tables = np.zeros((B, self.max_blocks), np.int32)  # trash page
             seeds = np.zeros((B,), np.int32)
+            active = np.zeros((B,), bool)
             for r in decode_reqs:
                 pos = r.num_cached
                 if pos < r.prompt_len:
@@ -573,21 +454,23 @@ class PagedEngine:
                 else:
                     tokens[r.slot] = r.generated[pos - r.prompt_len]
                 positions[r.slot] = pos
-                tables[r.slot] = pad_block_table(r.pages, self.max_blocks)
+                if r.pages:
+                    tables[r.slot] = pad_block_table(r.pages,
+                                                     self.max_blocks)
                 seeds[r.slot] = r.seed
-            tok, lp, kc, vc = self._step_fn(
-                self.params, self.cache.k, self.cache.v,
-                jnp.asarray(tokens), jnp.asarray(positions),
-                jnp.asarray(tables), jnp.asarray(seeds))
-            self.cache = PagedKVCache(k=kc, v=vc)
+                active[r.slot] = True
+            tok, lp = self.layout.step(self.params, tokens, positions,
+                                       tables, seeds, active)
             tok_np, lp_np = np.asarray(tok), np.asarray(lp)
             for r in decode_reqs:
                 pos = r.num_cached
                 r.num_cached += 1
                 r.last_weight_version = self.weight_version
-                page = self.page_size
-                self.allocator.note_computed(r.pages[pos // page],
-                                             pos % page + 1)
+                if r.pages:
+                    page = self.page_size
+                    self.allocator.note_computed(r.pages[pos // page],
+                                                 pos % page + 1)
+                self.layout.note_progress(r)
                 # sample only at the frontier: during prompt prefill AND
                 # during post-preemption replay of already-generated
                 # tokens the step is teacher-forced and its sampled token
@@ -600,9 +483,9 @@ class PagedEngine:
                         r.hit_eos = t == self.eos
                         # only index KV produced wholly under the current
                         # weights — spans of a mid-flight swap are stale
-                        self.scheduler.finish(
-                            r, index_in_cache=(
-                                r.weight_version == self.weight_version))
+                        idx = r.weight_version == self.weight_version
+                        self.layout.on_finish(r, index_in_cache=idx)
+                        self.scheduler.finish(r, index_in_cache=idx)
         if deferred:
             self.scheduler.stats.chunk_deferred_tokens += deferred
             if reg is not None:
@@ -669,10 +552,7 @@ class PagedEngine:
             if r.pending_cow is None:
                 continue
             src, dst, rows = r.pending_cow
-            kc, vc = self._cow_fn(
-                self.cache.k, self.cache.v,
-                jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32))
-            self.cache = PagedKVCache(k=kc, v=vc)
+            self.layout.cow(src, dst)
             self.allocator.note_computed(dst, rows)
             self.allocator.free([src])  # release the admission pin
             r.pending_cow = None
@@ -694,19 +574,15 @@ class PagedEngine:
             toks[i] = (r.prompt[pos] if pos < r.prompt_len
                        else r.generated[pos - r.prompt_len])
             poss[i] = pos
-        table = np.asarray(pad_block_table(r.pages, self.max_blocks),
-                           np.int32)
-        kc, vc = self._prefill_fn(
-            self.params, self.cache.k, self.cache.v, jnp.asarray(toks),
-            jnp.asarray(poss), jnp.asarray(table),
-            jnp.asarray(grant, jnp.int32))
-        self.cache = PagedKVCache(k=kc, v=vc)
+        self.layout.prefill_chunk_step(self.params, toks, poss, grant, r)
         r.num_cached = end
         r.last_weight_version = self.weight_version
-        page = self.page_size
-        for pidx in range(start // page, (end - 1) // page + 1):
-            self.allocator.note_computed(
-                r.pages[pidx], min(end - pidx * page, page))
+        if r.pages:
+            page = self.page_size
+            for pidx in range(start // page, (end - 1) // page + 1):
+                self.allocator.note_computed(
+                    r.pages[pidx], min(end - pidx * page, page))
+        self.layout.note_progress(r)
 
     def release_prefix_cache(self) -> int:
         """Drop every cache-held page reference (tests, memory pressure,
@@ -735,15 +611,22 @@ class PagedEngine:
                                if v.rid > r.rid]
                     victim = max(victims, key=lambda v: v.rid) if victims \
                         else r  # r itself is youngest: it yields
-                    self.scheduler.preempt(victim)
-                    tr = _trace.active()
-                    if tr is not None:
-                        tr.instant("preempt", "engine", rid=victim.rid)
-                        reg = _metrics.active()
-                        if reg is not None:
-                            reg.counter("engine/preemptions").inc()
+                    self.preempt_request(victim)
                     if victim is r:
                         break
+
+    def preempt_request(self, victim: Request) -> None:
+        """Preempt one running request: the layout snapshots or forgets
+        its cache state (per its preemption policy), then the scheduler
+        requeues it at the head."""
+        self.layout.on_preempt(victim)
+        self.scheduler.preempt(victim)
+        tr = _trace.active()
+        if tr is not None:
+            tr.instant("preempt", "engine", rid=victim.rid)
+            reg = _metrics.active()
+            if reg is not None:
+                reg.counter("engine/preemptions").inc()
 
     def run(self) -> List[Request]:
         """Drive until the queue and the running set are both empty."""

@@ -36,6 +36,28 @@ RUNNING = "running"
 FINISHED = "finished"
 
 
+class KVPageCost:
+    """Per-request page cost of the paged-KV layout: every cached token
+    occupies one row, so a request holding ``n`` tokens needs
+    ``ceil(n / page_size)`` pool pages."""
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+
+    def request_pages(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.page_size)
+
+
+class NullPageCost:
+    """Constant-size cache layouts (recurrent state): a request's cache
+    footprint is its slot, not a token-proportional page count — the
+    admission budget degenerates to slot availability and decode-time
+    page growth never happens."""
+
+    def request_pages(self, num_tokens: int) -> int:
+        return 0
+
+
 @dataclass
 class Request:
     """One generation request moving through the engine."""
@@ -114,11 +136,20 @@ class ContinuousScheduler:
 
     def __init__(self, *, max_batch: int, allocator: PageAllocator,
                  max_seq_len: int,
-                 prefix_cache: Optional[PrefixCache] = None):
+                 prefix_cache: Optional[PrefixCache] = None,
+                 cost_model=None, preempt_keeps_progress: bool = False):
         self.max_batch = max_batch
         self.allocator = allocator
         self.max_seq_len = max_seq_len
         self.prefix_cache = prefix_cache
+        # the cache layout's per-request cost model: how many pool pages a
+        # request holding n tokens needs.  Defaults to the paged-KV model
+        # so existing direct constructions keep their semantics.
+        self.cost_model = (cost_model if cost_model is not None
+                           else KVPageCost(allocator.page_size))
+        # state-cache layouts snapshot a preempted request's recurrent
+        # state instead of recomputing: its cached progress survives
+        self.preempt_keeps_progress = preempt_keeps_progress
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}  # slot -> request
         self._free_slots: List[int] = list(range(max_batch - 1, -1, -1))
@@ -174,7 +205,7 @@ class ContinuousScheduler:
                 self.allocator.incref([cow[0]])
             # total_len, not prompt_len: a preempted request re-enters with
             # generated tokens that must be re-cached (recompute on resume)
-            need = self.allocator.pages_needed(req.total_len + 1)
+            need = self.cost_model.request_pages(req.total_len + 1)
             need_new = need - len(shared_pages)
             if (not self.allocator.can_allocate(need_new)
                     and self.prefix_cache is not None):
@@ -222,12 +253,16 @@ class ContinuousScheduler:
         return joined
 
     def ensure_page_for(self, req: Request) -> None:
-        """Grow the block table so position ``num_cached`` is backed."""
-        if req.num_cached >= len(req.pages) * self.allocator.page_size:
-            if (not self.allocator.can_allocate(1)
-                    and self.prefix_cache is not None):
-                self.prefix_cache.evict(1, self.allocator)
-            req.pages.extend(self.allocator.allocate(1))
+        """Grow the block table so position ``num_cached`` is backed.
+        Under a constant-size (state) cost model this is a no-op: the
+        layout never asks for more pages than admission granted."""
+        if len(req.pages) >= self.cost_model.request_pages(
+                req.num_cached + 1):
+            return
+        if (not self.allocator.can_allocate(1)
+                and self.prefix_cache is not None):
+            self.prefix_cache.evict(1, self.allocator)
+        req.pages.extend(self.allocator.allocate(1))
 
     def _release_pages(self, req: Request) -> None:
         """Drop every reference the request holds: its page table, an
@@ -256,7 +291,8 @@ class ContinuousScheduler:
         del self.running[req.slot]
         self._free_slots.append(req.slot)
         req.slot = -1
-        req.num_cached = 0
+        if not self.preempt_keeps_progress:
+            req.num_cached = 0  # recompute on resume (paged-KV layouts)
         req.state = QUEUED
         self.waiting.appendleft(req)
         self.stats.preempted += 1

@@ -1,0 +1,243 @@
+"""Per-arch serve cache layouts: registry coverage, paged-vs-static
+parity across the config zoo, the SSM state-cache lifecycle
+(preempt/resume, exact-prompt reuse, the typed partial-COW guard), the
+kernel-backed decode paths, and the RolloutWorker auto fallback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import init_model
+from repro.serve import (Engine, LayoutError, PagedEngine, PrefixCache,
+                         StateCacheLayout, covers, layout_class)
+
+MOE_ARCH = "granite-moe-3b-a800m"
+SSM_ARCH = "mamba2-370m"
+HYBRID_ARCH = "zamba2-2.7b"
+
+
+def tiny(arch):
+    return get_config(arch).reduced().replace(vocab_size=64, max_seq_len=128)
+
+
+def tiny_prompts(cfg, n=3, plen=6, seed=1):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n, plen), 1, cfg.vocab_size - 4),
+        np.int32)
+
+
+def _params(cfg):
+    return init_model(jax.random.PRNGKey(0), cfg)
+
+
+# ---------------------------------------------------------------------------
+# layout registry
+# ---------------------------------------------------------------------------
+def test_layout_registry_covers_every_serving_kind():
+    names = {a: layout_class(get_config(a)) for a in list_archs()}
+    assert names[SSM_ARCH].name == "state"
+    assert names[HYBRID_ARCH].name == "state"
+    assert names[MOE_ARCH].name == "paged-kv-moe"
+    assert names["yi-9b"].name == "paged-kv"
+    # encoder-decoder / VLM stacks have no layout: the worker falls back
+    assert names["whisper-large-v3"] is None
+    assert names["llama-3.2-vision-90b"] is None
+
+
+def test_windowed_dense_is_uncovered_and_engine_refuses():
+    cfg = tiny("yi-9b").replace(sliding_window=16)
+    assert not covers(cfg)
+    with pytest.raises(NotImplementedError):
+        PagedEngine(cfg, max_batch=1, max_new_tokens=2)
+
+
+# ---------------------------------------------------------------------------
+# paged-vs-static token parity, every covered arch
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", list_archs())
+def test_paged_matches_static_per_arch_at_temp0(arch):
+    cfg = tiny(arch)
+    if not covers(cfg):
+        pytest.skip(f"no cache layout for kind={cfg.kind}")
+    params = _params(cfg)
+    prompts = tiny_prompts(cfg)
+    legacy = Engine(cfg, max_new_tokens=8, temperature=0.0)
+    want = legacy.generate(params, jnp.asarray(prompts))
+    # fewer slots than requests exercises queueing/backfill per layout
+    paged = PagedEngine(cfg, max_batch=2, max_new_tokens=8,
+                        temperature=0.0, max_seq_len=64)
+    assert paged.layout.name == layout_class(cfg).name
+    got = paged.generate(params, prompts)
+    np.testing.assert_array_equal(np.asarray(want.tokens),
+                                  np.asarray(got.tokens))
+    np.testing.assert_allclose(np.asarray(want.logprobs),
+                               np.asarray(got.logprobs), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# state-cache lifecycle (SSM / hybrid)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", [SSM_ARCH, HYBRID_ARCH])
+def test_state_cache_preempt_resume_parity(arch):
+    """Preemption snapshots slot state: the resumed request continues at
+    its frontier (no prefill recompute) and its tokens are unchanged."""
+    cfg = tiny(arch)
+    params = _params(cfg)
+    prompts = tiny_prompts(cfg, n=2, plen=5)
+
+    def fresh():
+        eng = PagedEngine(cfg, max_batch=2, max_new_tokens=10,
+                          temperature=0.0, max_seq_len=64, eos_token=-1)
+        reqs = [eng.submit(prompts[i], max_new_tokens=10, seed=i)
+                for i in range(2)]
+        eng.set_params(params)
+        return eng, reqs
+
+    ref_eng, ref_reqs = fresh()
+    ref_eng.run()
+    want = [list(r.generated) for r in ref_reqs]
+
+    eng, reqs = fresh()
+    victim = reqs[0]
+    for _ in range(20):
+        eng.step()
+        if len(victim.generated) >= 2:
+            break
+    assert victim.state == "running" and victim.generated
+    progress = victim.num_cached
+    eng.preempt_request(victim)
+    # preempt_keeps_progress: num_cached survives requeueing
+    assert victim.num_cached == progress
+    assert victim.rid in eng.layout._suspended
+    eng.run()
+    assert not eng.layout._suspended
+    assert [list(r.generated) for r in reqs] == want
+
+
+def test_state_cache_exact_prompt_reuse():
+    cfg = tiny(SSM_ARCH)
+    params = _params(cfg)
+    p = tiny_prompts(cfg, n=1, plen=6)[0]
+    eng = PagedEngine(cfg, max_batch=1, max_new_tokens=4,
+                      temperature=0.0, max_seq_len=64, eos_token=-1)
+    eng.set_params(params)
+    r1 = eng.submit(p, max_new_tokens=4, seed=0)
+    eng.run()
+    # identical prompt: admitted with prompt_len - 1 positions served
+    # from the snapshot stored when r1 finished its prefill
+    r2 = eng.submit(p, max_new_tokens=4, seed=0)
+    eng.run()
+    assert eng.layout.exact_prefix_hits == 1
+    assert eng.scheduler.stats.prefix_hit_tokens == len(p) - 1
+    assert list(r2.generated) == list(r1.generated)
+    # continuation (prompt + generated): resumes from the finish-time
+    # snapshot and matches a cold engine bit-for-bit
+    cont = np.concatenate([p, np.asarray(r1.generated, np.int32)])
+    r3 = eng.submit(cont, max_new_tokens=3, seed=0)
+    eng.run()
+    assert eng.layout.exact_prefix_hits == 2
+    cold = PagedEngine(cfg, max_batch=1, max_new_tokens=3,
+                       temperature=0.0, max_seq_len=64, eos_token=-1,
+                       prefix_sharing=False)
+    cold.set_params(params)
+    r4 = cold.submit(cont, max_new_tokens=3, seed=0)
+    cold.run()
+    assert cold.layout.exact_prefix_capacity == 0  # sharing disabled
+    assert list(r3.generated) == list(r4.generated)
+
+
+def test_state_layout_refuses_partial_cow_prefix_cache():
+    """Satellite (b): partial-page COW on a recurrent-state cache is
+    structurally impossible — constructing the combination raises."""
+    cfg = tiny(SSM_ARCH)
+    kw = dict(max_batch=2, page_size=4, num_pages=2, max_blocks=1,
+              max_seq_len=32, temperature=0.0, top_k=0, top_p=1.0,
+              use_kernel=False, use_sampling_kernel=False,
+              dtype=jnp.float32)
+    with pytest.raises(LayoutError):
+        StateCacheLayout(cfg, prefix_cache=PrefixCache(4), **kw)
+    # the layout has no slot axes for attention-only stacks either
+    with pytest.raises(LayoutError):
+        StateCacheLayout(tiny("yi-9b"), **kw)
+    # and the engine never attaches a radix trie to a state layout,
+    # even with prefix sharing requested
+    eng = PagedEngine(cfg, max_batch=1, max_new_tokens=2,
+                      temperature=0.0, max_seq_len=32,
+                      prefix_sharing=True)
+    assert eng.prefix_cache is None
+
+
+# ---------------------------------------------------------------------------
+# kernel-backed decode paths (MoE grouped GEMM, SSD state update)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", [MOE_ARCH, SSM_ARCH])
+def test_kernel_backed_layout_matches_reference_path(arch):
+    cfg = tiny(arch)
+    params = _params(cfg)
+    prompts = tiny_prompts(cfg, n=2, plen=5)
+    ref = PagedEngine(cfg, max_batch=2, max_new_tokens=5,
+                      temperature=0.0, max_seq_len=64)
+    kern = PagedEngine(cfg, max_batch=2, max_new_tokens=5,
+                       temperature=0.0, max_seq_len=64, use_kernel=True)
+    a = ref.generate(params, prompts)
+    b = kern.generate(params, prompts)
+    np.testing.assert_array_equal(np.asarray(a.tokens),
+                                  np.asarray(b.tokens))
+    np.testing.assert_allclose(np.asarray(a.logprobs),
+                               np.asarray(b.logprobs), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# RolloutWorker auto selection + fallback
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", [MOE_ARCH, SSM_ARCH])
+def test_rollout_worker_auto_matches_static_engine(arch):
+    from repro.rl.workers import RolloutWorker
+
+    cfg = tiny(arch)
+    params = _params(cfg)
+    prompts = tiny_prompts(cfg, n=4, plen=5)
+    auto = RolloutWorker("rollout/auto", cfg=cfg, max_new_tokens=4,
+                         temperature=0.0, seed=0, max_batch=2)
+    assert auto.engine_kind == "paged"
+    static = RolloutWorker("rollout/static", cfg=cfg, max_new_tokens=4,
+                           temperature=0.0, seed=0, engine="static")
+    auto.update_weights(params)
+    static.update_weights(params)
+    a = auto.generate({"prompt_tokens": prompts})
+    b = static.generate({"prompt_tokens": prompts})
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_rollout_worker_fallback_warns_on_uncovered_arch():
+    from repro.rl.workers import RolloutWorker
+
+    cfg = tiny("whisper-large-v3")
+    with pytest.warns(UserWarning, match="no paged cache layout"):
+        w = RolloutWorker("rollout/fb", cfg=cfg, max_new_tokens=2)
+    assert w.engine_kind == "static"
+    assert isinstance(w.engine, Engine)
+
+
+# ---------------------------------------------------------------------------
+# GRPO end-to-end through the paged engine (MoE and SSM)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", [MOE_ARCH, SSM_ARCH])
+def test_grpo_end_to_end_through_paged_engine(arch):
+    from repro.rl import GRPOConfig, GRPORunner
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.trainer import TrainHParams
+
+    cfg = tiny(arch)
+    rl = GRPOConfig(batch_size=8, group_size=2, iterations=2,
+                    max_new_tokens=3, mode="collocated", seed=0,
+                    profile_batches=(4,))
+    runner = GRPORunner(cfg, rl, TrainHParams(
+        optimizer=AdamWConfig(lr=1e-3, clip_norm=1.0)))
+    stats = runner.run(verbose=False)
+    assert len(stats) == 2
+    assert isinstance(runner.rollout.engine, PagedEngine)
+    assert runner.rollout.engine.layout.name == layout_class(cfg).name
+    for st in stats:
+        assert np.isfinite(st.metrics.get("loss", np.nan))

@@ -89,6 +89,33 @@ def test_ssd_scan_sweep(B, H, P, N, L, chunk, dtype):
 
 
 # ---------------------------------------------------------------------------
+# single-token SSD state update (state-cache decode path)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,P,N", [
+    (1, 2, 16, 8),
+    (3, 4, 32, 16),
+    (2, 24, 64, 128),  # mamba2-370m head geometry
+])
+def test_ssm_state_update_sweep(B, H, P, N, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 6)
+    state = jax.random.normal(ks[0], (B, H, P, N), jnp.float32)
+    x = jax.random.normal(ks[1], (B, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[2], (B, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[3], (H,)) * 0.3)
+    Bm = (jax.random.normal(ks[4], (B, N)) * 0.5).astype(dtype)
+    Cm = (jax.random.normal(ks[5], (B, N)) * 0.5).astype(dtype)
+    D = jnp.ones((H,), jnp.float32)
+    got_y, got_s = ops.ssm_state_update(state, x, dt, A, Bm, Cm, D)
+    want_y, want_s = ref.ssm_state_update_ref(state, x, dt, A, Bm, Cm, D)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
 # grouped matmul
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -119,6 +146,50 @@ def test_grouped_matmul_linearity_property(e, scale):
     b = ops.grouped_matmul(buf, w) * scale
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel exact MoE decode (gather + grouped GEMMs + combine)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,E,k,d,f", [
+    (1, 4, 2, 64, 32),
+    (7, 8, 2, 128, 64),
+    (160, 4, 2, 128, 128),  # T > 128: capacity rounds up to 256
+])
+def test_moe_decode_sweep(T, E, k, d, f, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = jax.random.normal(ks[0], (T, d), dtype)
+    gate_w = (jax.random.normal(ks[1], (E, d, f)) * 0.05).astype(dtype)
+    up_w = (jax.random.normal(ks[2], (E, d, f)) * 0.05).astype(dtype)
+    down_w = (jax.random.normal(ks[3], (E, f, d)) * 0.05).astype(dtype)
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(np.stack([rng.permutation(E)[:k]
+                                for _ in range(T)]).astype(np.int32))
+    gv = jnp.asarray(rng.dirichlet(np.ones(k), size=T).astype(np.float32))
+    got = ops.moe_decode(x, idx, gv, gate_w, up_w, down_w)
+    want = ref.moe_decode_ref(x, idx, gv, gate_w, up_w, down_w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype] * 10, rtol=TOL[dtype] * 10)
+
+
+def test_moe_decode_is_capacity_free():
+    """Every token's full top-k contributes even when all tokens pick
+    the same expert — the drop regime capacity dispatch cannot serve."""
+    T, E, k, d, f = 9, 4, 2, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    x = jax.random.normal(ks[0], (T, d))
+    gate_w = jax.random.normal(ks[1], (E, d, f)) * 0.05
+    up_w = jax.random.normal(ks[2], (E, d, f)) * 0.05
+    down_w = jax.random.normal(ks[3], (E, f, d)) * 0.05
+    # adversarial skew: every token routes to experts {0, 1}
+    idx = jnp.tile(jnp.asarray([[0, 1]], jnp.int32), (T, 1))
+    gv = jnp.tile(jnp.asarray([[0.7, 0.3]], jnp.float32), (T, 1))
+    got = ops.moe_decode(x, idx, gv, gate_w, up_w, down_w)
+    want = ref.moe_decode_ref(x, idx, gv, gate_w, up_w, down_w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
 
 
 # ---------------------------------------------------------------------------
